@@ -1,0 +1,68 @@
+"""Shared benchmark plumbing.
+
+CI scale (default) keeps every benchmark CPU-feasible; ``--full`` restores
+paper-scale settings (40k rows, 500 epochs, batch 500) for real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro.gan.ctgan import CTGANConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchScale:
+    rows: int
+    clients: int
+    rounds: int          # fed rounds / epochs
+    md_epochs: int
+    eval_samples: int
+    cfg: CTGANConfig
+    datasets: tuple[str, ...]
+
+
+CI = BenchScale(rows=1500, clients=3, rounds=6, md_epochs=3,
+                eval_samples=512,
+                cfg=CTGANConfig(batch_size=100, gen_hidden=(64, 64),
+                                disc_hidden=(64, 64), pac=10, z_dim=64),
+                datasets=("adult",))
+
+FULL = BenchScale(rows=40_000, clients=5, rounds=500, md_epochs=150,
+                  eval_samples=40_000,
+                  cfg=CTGANConfig(),     # paper defaults
+                  datasets=("adult", "covertype", "credit", "intrusion"))
+
+
+def scale(full: bool) -> BenchScale:
+    return FULL if full else CI
+
+
+_RESULTS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """The run.py contract: ``name,us_per_call,derived`` CSV rows."""
+    _RESULTS.append({"name": name, "us": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(path: str, obj):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=float)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return (time.perf_counter() - self.t0) * 1e6

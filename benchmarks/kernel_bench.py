@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on this
+CPU + the roofline-PROJECTED TPU v5e time for the Pallas kernel (derived
+from bytes/flops — the kernels themselves only execute in interpret mode
+here, which measures Python, not silicon)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW
+
+from .common import emit
+
+
+def _time(f, *args, iters=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flash(B=1, H=8, S=2048, hd=128):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us_cpu = _time(f, q, k, v)
+    flops = 4 * B * H * S * S * hd / 2          # causal halves the work
+    hbm = (3 * q.size + q.size) * 4             # flash: q,k,v in + o out only
+    proj = max(flops / PEAK_FLOPS, hbm / HBM_BW) * 1e6
+    emit(f"kernel/flash_attn_S{S}", us_cpu,
+         f"tpu_roofline_us={proj:.0f};arith_int={flops/hbm:.0f}")
+
+
+def bench_vgm(N=40_000, K=10):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N,))
+    means = jnp.linspace(-3, 3, K)
+    stds = jnp.full((K,), 0.5)
+    logw = jnp.zeros((K,))
+    g = jax.random.gumbel(key, (N, K))
+    f = jax.jit(lambda *a: ref.vgm_encode_ref(*a))
+    us_cpu = _time(f, x, means, stds, logw, g)
+    hbm = (N * K * 4 * 2 + N * 4 * 2)
+    proj = hbm / HBM_BW * 1e6
+    emit(f"kernel/vgm_encode_N{N}", us_cpu, f"tpu_roofline_us={proj:.1f}")
+
+
+def bench_weighted_agg(P=5, D=1_250_000):
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (P, D), jnp.float32)
+    w = jnp.full((P,), 1.0 / P)
+    f = jax.jit(lambda s, w: ref.weighted_agg_ref(s, w))
+    us_cpu = _time(f, s, w)
+    hbm = (P * D + D) * 4
+    proj = hbm / HBM_BW * 1e6
+    emit(f"kernel/weighted_agg_P{P}_D{D}", us_cpu,
+         f"tpu_roofline_us={proj:.1f};one_pass=true")
+
+
+def run_all():
+    bench_flash()
+    bench_vgm()
+    bench_weighted_agg()

@@ -1,0 +1,68 @@
+"""§Roofline generator: renders the dry-run JSONL records into the
+EXPERIMENTS.md table (all 40 combos x meshes)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = ("results/dryrun_single.jsonl", "results/dryrun_multi.jsonl")
+
+
+def load_records(paths=RESULTS) -> list[dict]:
+    recs = []
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                recs.extend(json.loads(l) for l in f if l.strip())
+    return recs
+
+
+def _advice(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    mode = r.get("mode", "")
+    if dom == "collective":
+        return ("hoist K/V all-gathers out of q-chunk loop / overlap FSDP "
+                "gathers with compute" if mode != "decode" else
+                "replicate weights over data axis for serving (no FSDP)")
+    if dom == "memory":
+        return ("flash-attention kernel removes S^2 score traffic" if mode in
+                ("train", "prefill") else "shard/quantize KV cache")
+    return "already compute-bound: increase per-chip batch or quantize"
+
+
+def markdown_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+             "dominant | MODEL_FLOPS | useful | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "SKIP":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP | | | | | | {r.get('reason','')[:60]} |")
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL | | | | | | {r.get('error','')[:60]} |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rf['compute_s']:.3g} | {rf['memory_s']:.3g} | "
+            f"{rf['collective_s']:.3g} | {rf['dominant']} | "
+            f"{rf['model_flops']:.2e} | {rf['useful_flops_ratio']:.2f} | "
+            f"{_advice(r)} |")
+    return "\n".join(lines)
+
+
+def run_all():
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "OK"]
+    for r in ok:
+        rf = r["roofline"]
+        step_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             step_s * 1e6,
+             f"dom={rf['dominant']};useful={rf['useful_flops_ratio']:.2f}")
+    if not ok:
+        print("roofline/no_records,0,run repro.launch.dryrun first")

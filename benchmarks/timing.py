@@ -1,0 +1,122 @@
+"""Timing benchmarks — the paper's Fig.8 and Fig.10.
+
+The paper's absolute numbers are artifacts of its PyTorch-RPC/1GbE/2080Ti
+testbed; we reproduce the STRUCTURE: measured compute phases on this
+runtime + the bytes-on-wire model on the paper's measured 943 Mb/s link
+(core/comm_model.py).  The claims under test:
+  (1) Fed-TGAN per-epoch time < MD-TGAN per-epoch time (Fig.8a),
+  (2) communication is the gap, and federator calc is negligible,
+  (3) more local epochs per round amortize aggregation (Fig.8b),
+  (4) FL scales with clients; MD's server link becomes the bottleneck (Fig.10a).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm_model
+from repro.core.architectures import run_federated, run_mdtgan
+from repro.tabular import make_dataset, partition_full_copy
+
+from .common import BenchScale, emit
+
+
+def _measure_phase_times(sc: BenchScale, ds):
+    """One measured fed round + one measured MD epoch, phase-decomposed."""
+    parts = partition_full_copy(ds, sc.clients)
+    t0 = time.perf_counter()
+    fed = run_federated(parts, ds.schema, cfg=sc.cfg, rounds=2, local_steps=1)
+    t_fed_round = (time.perf_counter() - t0) / 2
+    t0 = time.perf_counter()
+    md = run_mdtgan(parts, ds.schema, cfg=sc.cfg, epochs=2, steps_per_epoch=1)
+    t_md_epoch = (time.perf_counter() - t0) / 2
+    return fed, md, t_fed_round, t_md_epoch
+
+
+def fig8a_phase_decomposition(sc: BenchScale) -> dict:
+    ds = make_dataset(sc.datasets[0], n_rows=sc.rows, seed=0)
+    fed, md, t_fed, t_md = _measure_phase_times(sc, ds)
+
+    comm_fed = comm_model.transfer_seconds(fed.comm_bytes_per_round)
+    comm_md = comm_model.transfer_seconds(md.comm_bytes_per_round)
+    # federator calculation = one weighted average of the models (tiny)
+    total_fed = t_fed + comm_fed
+    total_md = t_md + comm_md
+    out = {"fed": {"calc_clients_s": t_fed, "comm_s": comm_fed,
+                   "total_s": total_fed,
+                   "bytes": fed.comm_bytes_per_round},
+           "md": {"calc_s": t_md, "comm_s": comm_md, "total_s": total_md,
+                  "bytes": md.comm_bytes_per_round},
+           "speedup_pct": 100.0 * (total_md - total_fed) / max(total_fed, 1e-9)}
+    emit("fig8a/fed_epoch", total_fed * 1e6,
+         f"comm={comm_fed*1e3:.1f}ms;calc={t_fed*1e3:.0f}ms")
+    emit("fig8a/md_epoch", total_md * 1e6,
+         f"comm={comm_md*1e3:.1f}ms;calc={t_md*1e3:.0f}ms;"
+         f"fed_speedup={out['speedup_pct']:.0f}%")
+    return out
+
+
+def fig8b_local_epochs(sc: BenchScale, total_epochs: int | None = None) -> dict:
+    """Total training time vs local epochs per round (1, 10, 25, 50 in the
+    paper; scaled grid here)."""
+    ds = make_dataset(sc.datasets[0], n_rows=sc.rows, seed=0)
+    parts = partition_full_copy(ds, sc.clients)
+    total = total_epochs or max(sc.rounds * 2, 8)
+    grid = [e for e in (1, 2, 4, 8) if e <= total]
+    out = {}
+    for local in grid:
+        rounds = total // local
+        t0 = time.perf_counter()
+        res = run_federated(parts, ds.schema, cfg=sc.cfg, rounds=rounds,
+                            local_steps=local)
+        t_train = time.perf_counter() - t0
+        t_comm = rounds * comm_model.transfer_seconds(res.comm_bytes_per_round)
+        out[local] = {"rounds": rounds, "train_s": t_train, "comm_s": t_comm,
+                      "total_s": t_train + t_comm}
+        emit(f"fig8b/local_epochs_{local}", (t_train + t_comm) * 1e6,
+             f"rounds={rounds};comm={t_comm*1e3:.0f}ms")
+    return out
+
+
+def fig10a_client_scaling(sc: BenchScale) -> dict:
+    """Per-epoch bytes at the server NIC vs #clients (modeled — the paper's
+    measured effect is the server link saturating)."""
+    ds = make_dataset(sc.datasets[0], n_rows=min(sc.rows, 1000), seed=0)
+    from repro.gan.trainer import init_gan_state
+    from repro.tabular.encoders import fit_centralized_encoders
+    key = jax.random.PRNGKey(0)
+    enc = fit_centralized_encoders(ds.data, ds.schema, key)
+    st = init_gan_state(key, sc.cfg, enc.cond_dim, enc.encoded_dim)
+    model_bytes = comm_model.pytree_bytes((st.g_params, st.d_params))
+    d_bytes = comm_model.pytree_bytes(st.d_params)
+    out = {}
+    for p in (5, 10, 20):
+        fl = comm_model.fl_bytes_per_round(p, model_bytes)
+        md = comm_model.md_bytes_per_epoch(p, steps=max(sc.rows // sc.cfg.batch_size, 1),
+                                           batch=sc.cfg.batch_size,
+                                           row_bytes_dim=enc.encoded_dim + enc.cond_dim,
+                                           disc_bytes=d_bytes)
+        out[p] = {"fl_bytes": fl, "md_bytes": md,
+                  "fl_s": comm_model.transfer_seconds(fl),
+                  "md_s": comm_model.transfer_seconds(md)}
+        emit(f"fig10a/clients_{p}",
+             comm_model.transfer_seconds(fl) * 1e6,
+             f"fl={fl/1e6:.1f}MB;md={md/1e6:.1f}MB;ratio={md/fl:.1f}x")
+    return out
+
+
+def fig10b_row_scaling(sc: BenchScale) -> dict:
+    """Measured per-round client compute vs rows per client."""
+    out = {}
+    for rows in (max(sc.rows // 4, 300), sc.rows // 2, sc.rows):
+        ds = make_dataset(sc.datasets[0], n_rows=rows, seed=0)
+        parts = partition_full_copy(ds, sc.clients)
+        t0 = time.perf_counter()
+        run_federated(parts, ds.schema, cfg=sc.cfg, rounds=1, local_steps=1)
+        dt = time.perf_counter() - t0
+        out[rows] = dt
+        emit(f"fig10b/rows_{rows}", dt * 1e6, "")
+    return out

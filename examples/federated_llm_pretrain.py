@@ -1,0 +1,33 @@
+"""Fed-TGAN's technique beyond tabular GANs: federated LM pre-training.
+
+The paper's §4.2 weighting generalizes to any per-client statistics
+(DESIGN.md §5).  Here 4 clients hold Non-IID token streams (skewed Zipf
+exponents + rotated vocab); the federator weights their model updates by
+token-frequency similarity and runs weighted-FedAvg rounds over a reduced
+smollm-135m.
+
+Run:  PYTHONPATH=src python examples/federated_llm_pretrain.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.train import run_federated
+
+
+def main():
+    cfg = get_smoke_config("smollm-135m")
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+    _, hist, w = run_federated(cfg, clients=4, rounds=4, local_steps=2,
+                               batch=4, seq=64, lr=3e-4, iid=False,
+                               weighting="fedtgan")
+    print(f"\nsimilarity weights over Non-IID clients: {np.round(w, 3)}")
+    losses = [h["loss"] for h in hist]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "federated training should make progress"
+
+
+if __name__ == "__main__":
+    main()

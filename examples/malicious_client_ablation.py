@@ -1,0 +1,47 @@
+"""Paper §5.3.3 ablation: one client holds 40k copies of a single row.
+
+Shows the similarity component of Fed-TGAN's weighting (vs quantity-only
+'Fed\\SW') detecting and down-weighting the degenerate client, and the
+effect on synthesis quality.
+
+Run:  PYTHONPATH=src python examples/malicious_client_ablation.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.architectures import run_federated
+from repro.gan.ctgan import CTGANConfig
+from repro.tabular import make_dataset, partition_malicious
+
+
+def main():
+    ds = make_dataset("intrusion", n_rows=2000, seed=0)
+    # paper proportions: 4 honest clients with IID samples, 1 malicious
+    # client whose row count equals all honest data combined
+    parts = partition_malicious(ds, n_clients=5, good_rows=500, bad_rows=2000)
+    cfg = CTGANConfig(batch_size=100, gen_hidden=(64, 64),
+                      disc_hidden=(64, 64), pac=10, z_dim=64)
+
+    fed = run_federated(parts, ds.schema, cfg=cfg, rounds=6, local_steps=1,
+                        weighting="fedtgan", eval_real=ds.data,
+                        eval_every=3, eval_samples=1024, name="fed-tgan")
+    nsw = run_federated(parts, ds.schema, cfg=cfg, rounds=6, local_steps=1,
+                        weighting="quantity", eval_real=ds.data,
+                        eval_every=3, eval_samples=1024, name="fed-no-sw")
+
+    print("malicious client weight:")
+    print(f"  Fed-TGAN (similarity+quantity): {fed.weights[-1]:.3f}")
+    print(f"  Fed\\SW  (quantity only):        {nsw.weights[-1]:.3f}")
+    assert fed.weights[-1] < nsw.weights[-1], \
+        "similarity component must down-weight the malicious client"
+    print("\nfinal quality (lower is better):")
+    print(f"  Fed-TGAN: jsd={fed.history[-1]['avg_jsd']:.3f} "
+          f"wd={fed.history[-1]['avg_wd']:.3f}")
+    print(f"  Fed\\SW : jsd={nsw.history[-1]['avg_jsd']:.3f} "
+          f"wd={nsw.history[-1]['avg_wd']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: Fed-TGAN end-to-end on a synthetic Adult-like table.
+
+Demonstrates the paper's full pipeline through the public API:
+  1. clients compute local statistics (categorical freqs + local VGMs),
+  2. the federator builds global encoders WITHOUT seeing any rows (§4.1),
+  3. table-similarity-aware aggregation weights (§4.2, Fig.4),
+  4. federated CTGAN training rounds (weighted FedAvg of G and D),
+  5. synthesis + Avg-JSD / Avg-WD evaluation (§5.2).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core.architectures import run_federated
+from repro.gan.ctgan import CTGANConfig
+from repro.tabular import make_dataset, partition_quantity_skew
+
+def main():
+    # Synthetic stand-in for the paper's Adult subsample (14 columns).
+    ds = make_dataset("adult", n_rows=2000, seed=0)
+    print(f"dataset: {ds.name}, {ds.n_rows} rows, {len(ds.schema)} columns")
+
+    # Paper §5.3.2 scenario: 2 small clients + 1 holding everything.
+    parts = partition_quantity_skew(ds, n_clients=3, small_rows=250)
+    print("client rows:", [len(p) for p in parts])
+
+    cfg = CTGANConfig(batch_size=100, gen_hidden=(128, 128),
+                      disc_hidden=(128, 128), pac=10, z_dim=64)
+    res = run_federated(parts, ds.schema, cfg=cfg, rounds=8, local_steps=2,
+                        weighting="fedtgan", eval_real=ds.data,
+                        eval_every=4, eval_samples=1024)
+
+    print(f"\naggregation weights (§4.2): {np.round(res.weights, 3)}")
+    print("  -> the 2000-row client dominates, as the paper predicts")
+    for h in res.history:
+        print(f"round {h['round']:3d}: avg_jsd={h['avg_jsd']:.3f} "
+              f"avg_wd={h['avg_wd']:.3f} g_loss={h['g_loss']:.3f}")
+    print(f"\nbytes on wire per round (federator NIC): "
+          f"{res.comm_bytes_per_round/1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Checkpointing: flat-npz + JSON manifest for arbitrary pytrees.
+
+Works for CTGAN states and transformer TrainStates alike; leaves are
+gathered to host (sharded arrays become numpy) and restored with the
+original tree structure.  Atomic via tmp-then-rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        arr = np.asarray(leaf)
+        if arr.dtype not in (np.float32, np.float64, np.int32, np.int64,
+                             np.uint32, np.bool_, np.float16, np.int8,
+                             np.uint8, np.int16, np.uint16):
+            arr = arr.astype(np.float32)    # npz can't store bf16 & friends
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path + ".npz")
+    manifest = {"step": step, "keys": sorted(flat),
+                "treedef": str(treedef)}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+    return path + ".npz"
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like, step: int | None = None):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    import jax.numpy as jnp
+    for kp, leaf in flat[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        arr = data[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = jnp.asarray(arr, leaf.dtype)   # handles bf16 restore
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat[1], leaves)

@@ -1,0 +1,45 @@
+"""Architecture registry: one module per assigned architecture (exact dims
+from the assignment) + the paper's own CTGAN config.
+
+``get_config(name)`` returns the full-size :class:`ModelConfig`;
+``get_smoke_config(name)`` returns the reduced same-family variant used by
+the CPU smoke tests (2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..models.config import ModelConfig, INPUT_SHAPES, InputShape
+
+from . import (llama4_maverick_400b_a17b, mixtral_8x22b, llama3_8b,
+               smollm_135m, xlstm_1_3b, hubert_xlarge, chatglm3_6b,
+               qwen2_5_32b, jamba_1_5_large_398b, llama_3_2_vision_11b)
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
+    "mixtral-8x22b": mixtral_8x22b,
+    "llama3-8b": llama3_8b,
+    "smollm-135m": smollm_135m,
+    "xlstm-1.3b": xlstm_1_3b,
+    "hubert-xlarge": hubert_xlarge,
+    "chatglm3-6b": chatglm3_6b,
+    "qwen2.5-32b": qwen2_5_32b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _MODULES[name].CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _MODULES[name].smoke_config()
+
+
+def supported_shapes(name: str) -> list[str]:
+    """Which of the 4 assigned input shapes run for this arch (skips are
+    documented in DESIGN.md §5)."""
+    return _MODULES[name].SUPPORTED_SHAPES

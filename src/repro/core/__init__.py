@@ -1,0 +1,8 @@
+"""Fed-TGAN core: the paper's contribution as composable JAX modules."""
+from . import divergence
+from .weighting import (weights_from_divergence, build_divergence_matrix,
+                        fedtgan_weights, uniform_weights, quantity_only_weights)
+from .encoding import (ClientStats, FederatedInit, compute_client_stats,
+                       federated_encoder_init)
+from .aggregation import weighted_average, psum_weighted, broadcast_from
+from .fedavg import make_federated_round, shard_map_federated_round

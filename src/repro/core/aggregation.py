@@ -1,0 +1,51 @@
+"""Weighted model aggregation (the federator's merge step).
+
+Two code paths:
+  * ``weighted_average`` — host/global view: stack of P client pytrees plus
+    a (P,) weight vector -> merged pytree.  Used by the simulation drivers
+    and as the oracle for the Pallas ``weighted_agg`` kernel.
+  * ``psum_weighted`` — SPMD view: inside ``shard_map`` each client axis
+    slice holds its local pytree; aggregation is one weighted psum over the
+    client axis (the TPU-native rendering of the RPC gather+merge+scatter).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def weighted_average(stacked: PyTree, weights: jnp.ndarray) -> PyTree:
+    """``stacked`` leaves have a leading client axis P; returns the
+    W-weighted average along it.  sum(weights) need not be 1 (softmax output
+    is, but we normalize defensively)."""
+    w = jnp.asarray(weights)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def merge(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * wb, axis=0)
+
+    return jax.tree.map(merge, stacked)
+
+
+def psum_weighted(local: PyTree, local_weight: jnp.ndarray,
+                  axis_name: str | tuple[str, ...]) -> PyTree:
+    """SPMD weighted all-reduce: every client slice contributes
+    ``local_weight * leaf`` and receives the merged model.  Weights must
+    already sum to 1 across the axis (softmax output)."""
+    def merge(leaf):
+        return jax.lax.psum(leaf * local_weight.astype(leaf.dtype), axis_name)
+    return jax.tree.map(merge, local)
+
+
+def broadcast_from(local: PyTree, axis_name: str, src: int = 0) -> PyTree:
+    """All-pick of one slice's pytree (used by MD-GAN's central generator)."""
+    def pick(leaf):
+        idx = jax.lax.axis_index(axis_name)
+        masked = jnp.where(idx == src, 1.0, 0.0).astype(leaf.dtype)
+        return jax.lax.psum(leaf * masked, axis_name)
+    return jax.tree.map(pick, local)

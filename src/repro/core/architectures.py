@@ -1,0 +1,285 @@
+"""The four decentralized-training architectures evaluated in the paper
+(§3, §5): Centralized, vanilla FL-TGAN, Fed-TGAN (ours), and MD-TGAN — all
+driving the SAME CTGAN substrate so comparisons are apples-to-apples.
+
+Simulation model: all clients execute "in parallel" as a stacked client
+axis under ``jax.vmap`` (host-side loop-free), mirroring the paper's
+rpc_async fan-out; the federator's merge is :func:`weighted_average`.
+Per-round wall-clock and bytes-on-wire come from :mod:`.comm_model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..gan.ctgan import CTGANConfig
+from ..gan.sampler import ConditionalSampler
+from ..gan.trainer import (GANState, init_gan_state, make_train_steps,
+                           sample_synthetic)
+from ..tabular.encoders import ColumnSpec, TableEncoders, fit_centralized_encoders
+from ..tabular.metrics import similarity_report
+from . import comm_model
+from .aggregation import weighted_average
+from .encoding import (ClientStats, compute_client_stats,
+                       federated_encoder_init, client_vgm_dicts)
+from .weighting import (fedtgan_weights, quantity_only_weights,
+                        uniform_weights, build_divergence_matrix,
+                        weights_from_divergence)
+
+
+@dataclasses.dataclass
+class FedRunResult:
+    name: str
+    weights: np.ndarray
+    history: list[dict]            # per eval point: round, metrics
+    encoders: TableEncoders
+    final_g_params: dict
+    seconds: float
+    comm_bytes_per_round: float
+
+
+def _stack_states(states: list[GANState]) -> GANState:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _replicate(tree, P: int):
+    return jax.tree.map(lambda m: jnp.broadcast_to(m[None], (P,) + m.shape), tree)
+
+
+def _setup_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
+                     cfg: CTGANConfig, seed: int, weighting: str):
+    """Shared init path (§4.1 protocol + §4.2 weights) for all FL variants."""
+    P = len(client_data)
+    key = jax.random.PRNGKey(seed)
+    k_stats, k_init, k_w, k_model, k_enc = jax.random.split(key, 5)
+
+    stats = [compute_client_stats(d, schema, jax.random.fold_in(k_stats, i))
+             for i, d in enumerate(client_data)]
+    init = federated_encoder_init(stats, schema, k_init)
+    n_rows = jnp.asarray(init.n_rows, jnp.float32)
+
+    if weighting == "fedtgan":
+        w = fedtgan_weights(schema, init.client_cat_freqs,
+                            client_vgm_dicts(stats), init.encoders,
+                            init.global_cat_freqs, n_rows, k_w)
+    elif weighting == "uniform":
+        w = uniform_weights(P)
+    elif weighting == "quantity":          # Fed\SW ablation
+        w = quantity_only_weights(n_rows)
+    else:
+        raise ValueError(weighting)
+
+    enc = init.encoders
+    spans = tuple(enc.spans())
+    cond_spans = tuple(enc.condition_spans())
+    samplers = [ConditionalSampler(
+        np.asarray(enc.encode(d, jax.random.fold_in(k_enc, i))), enc,
+        seed=seed + i) for i, d in enumerate(client_data)]
+    # Federator initializes ONE model and distributes it (identical start).
+    state0 = init_gan_state(k_model, cfg, enc.cond_dim, enc.encoded_dim)
+    states = [state0._replace(rng=jax.random.fold_in(state0.rng, i))
+              for i in range(P)]
+    return init, w, enc, spans, cond_spans, samplers, _stack_states(states)
+
+
+def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
+                  *, cfg: CTGANConfig = CTGANConfig(), rounds: int = 20,
+                  local_steps: int = 1, seed: int = 0,
+                  weighting: str = "fedtgan",
+                  eval_real: np.ndarray | None = None,
+                  eval_every: int = 5, eval_samples: int = 4096,
+                  name: str | None = None) -> FedRunResult:
+    """Fed-TGAN (weighting='fedtgan'), vanilla FL ('uniform'), or the
+    Fed\\SW ablation ('quantity')."""
+    P = len(client_data)
+    init, w, enc, spans, cond_spans, samplers, states = _setup_federated(
+        client_data, schema, cfg, seed, weighting)
+    step_fn = make_train_steps(cfg, spans, cond_spans)
+
+    def one_round(states, batches):
+        def local(st, b):
+            def body(s, batch):
+                return step_fn(s, batch)
+            return jax.lax.scan(body, st, b)
+        states, metrics = jax.vmap(local)(states, batches)
+        merged_g = weighted_average(states.g_params, w)
+        merged_d = weighted_average(states.d_params, w)
+        states = states._replace(g_params=_replicate(merged_g, P),
+                                 d_params=_replicate(merged_d, P))
+        return states, metrics
+
+    one_round = jax.jit(one_round)
+    model_bytes = comm_model.pytree_bytes(
+        jax.tree.map(lambda x: x[0], (states.g_params, states.d_params)))
+    bytes_round = comm_model.fl_bytes_per_round(P, model_bytes)
+
+    history = []
+    key_eval = jax.random.PRNGKey(seed + 999)
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        conds, masks, reals = zip(*[s.presample_rounds(1, local_steps,
+                                                       cfg.batch_size)
+                                    for s in samplers])
+        batches = (jnp.asarray(np.concatenate(conds)),
+                   jnp.asarray(np.concatenate(masks)),
+                   jnp.asarray(np.concatenate(reals)))
+        states, metrics = one_round(states, batches)
+        if eval_real is not None and ((r + 1) % eval_every == 0 or r == rounds - 1):
+            g = jax.tree.map(lambda x: x[0], states.g_params)
+            synth = sample_synthetic(g, jax.random.fold_in(key_eval, r), cfg,
+                                     spans, enc.cond_dim, eval_samples)
+            rep = similarity_report(eval_real, enc.decode(np.asarray(synth)),
+                                    schema)
+            rep.update(round=r + 1,
+                       d_loss=float(jnp.mean(metrics["d_loss"])),
+                       g_loss=float(jnp.mean(metrics["g_loss"])),
+                       t=time.perf_counter() - t0)
+            history.append(rep)
+    dt = time.perf_counter() - t0
+    return FedRunResult(name or f"fed-{weighting}", np.asarray(w), history,
+                        enc, jax.tree.map(lambda x: x[0], states.g_params),
+                        dt, bytes_round)
+
+
+def run_centralized(data: np.ndarray, schema: list[ColumnSpec], *,
+                    cfg: CTGANConfig = CTGANConfig(), epoch_steps: int = 20,
+                    epochs: int = 1, seed: int = 0,
+                    eval_real: np.ndarray | None = None,
+                    eval_every: int = 5, eval_samples: int = 4096) -> FedRunResult:
+    """Single-site baseline: pooled data, centrally fitted encoders."""
+    key = jax.random.PRNGKey(seed)
+    k_enc, k_model, k_e2 = jax.random.split(key, 3)
+    enc = fit_centralized_encoders(data, schema, k_enc)
+    spans = tuple(enc.spans())
+    cond_spans = tuple(enc.condition_spans())
+    sampler = ConditionalSampler(np.asarray(enc.encode(data, k_e2)), enc, seed)
+    state = init_gan_state(k_model, cfg, enc.cond_dim, enc.encoded_dim)
+    step_fn = jax.jit(make_train_steps(cfg, spans, cond_spans))
+
+    history = []
+    t0 = time.perf_counter()
+    for ep in range(epochs):
+        for _ in range(epoch_steps):
+            c, m, r = sampler.sample(cfg.batch_size)
+            state, metrics = step_fn(state, (jnp.asarray(c), jnp.asarray(m),
+                                             jnp.asarray(r)))
+        if eval_real is not None and ((ep + 1) % eval_every == 0 or ep == epochs - 1):
+            synth = sample_synthetic(state.g_params,
+                                     jax.random.fold_in(key, ep), cfg, spans,
+                                     enc.cond_dim, eval_samples)
+            rep = similarity_report(eval_real, enc.decode(np.asarray(synth)), schema)
+            rep.update(round=ep + 1, d_loss=float(metrics["d_loss"]),
+                       g_loss=float(metrics["g_loss"]),
+                       t=time.perf_counter() - t0)
+            history.append(rep)
+    dt = time.perf_counter() - t0
+    return FedRunResult("centralized", np.ones(1), history, enc,
+                        state.g_params, dt, 0.0)
+
+
+def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
+               cfg: CTGANConfig = CTGANConfig(), epochs: int = 20,
+               steps_per_epoch: int = 1, seed: int = 0,
+               eval_real: np.ndarray | None = None, eval_every: int = 5,
+               eval_samples: int = 4096, swap: bool = True) -> FedRunResult:
+    """MD-GAN [9] adapted to CTGAN: ONE central generator, one
+    discriminator per client, uniform gradient averaging for G, and the
+    peer-to-peer discriminator swap each epoch."""
+    P = len(client_data)
+    # MD also needs agreed encoders; grant it the same §4.1 init (the paper
+    # does the same for fairness).
+    init, _, enc, spans, cond_spans, samplers, states = _setup_federated(
+        client_data, schema, cfg, seed, "uniform")
+    step_fn = make_train_steps(cfg, spans, cond_spans)
+    # keep one central G (slice 0), stack of P discriminators.
+    g_state = jax.tree.map(lambda x: x[0], states)
+
+    def md_step(g_params, g_opt, d_states, batches, key):
+        """One global step: every client D trains on central-G fakes; G
+        updates from the average of per-client generator losses."""
+        from ..gan.ctgan import (apply_activations, conditional_loss,
+                                 discriminator_forward, generator_forward,
+                                 gradient_penalty)
+        from ..optim import adam
+        opt = adam(cfg.lr, cfg.b1, cfg.b2)
+        conds, masks, reals = batches
+        n_hidden = len(cfg.gen_hidden)
+
+        def d_loss_one(d_params, cond, real, k):
+            kz, ka, k1, k2, kgp = jax.random.split(k, 5)
+            z = jax.random.normal(kz, (real.shape[0], cfg.z_dim))
+            fake = apply_activations(
+                generator_forward(g_params, z, cond, n_hidden), spans, ka, cfg.tau)
+            fi = jnp.concatenate([fake, cond], 1)
+            ri = jnp.concatenate([real, cond], 1)
+            yf = discriminator_forward(d_params, fi, k1, cfg)
+            yr = discriminator_forward(d_params, ri, k2, cfg)
+            return (jnp.mean(yf) - jnp.mean(yr)
+                    + cfg.gp_lambda * gradient_penalty(d_params, ri, fi, kgp, cfg))
+
+        def d_update(dst, cond, real, k):
+            grads = jax.grad(d_loss_one)(dst.d_params, cond, real, k)
+            d_params, d_opt = opt.update(grads, dst.d_opt, dst.d_params)
+            return dst._replace(d_params=d_params, d_opt=d_opt)
+
+        kd = jax.random.split(key, P + 1)
+        d_states = jax.vmap(d_update)(d_states, conds, reals,
+                                      jnp.stack(list(kd[:P])))
+
+        def g_loss(gp, k):
+            def per_client(d_params, cond, mask, kk):
+                kz, ka, kdd = jax.random.split(kk, 3)
+                z = jax.random.normal(kz, (cond.shape[0], cfg.z_dim))
+                logits = generator_forward(gp, z, cond, n_hidden)
+                fake = apply_activations(logits, spans, ka, cfg.tau)
+                fi = jnp.concatenate([fake, cond], 1)
+                yf = discriminator_forward(d_params, fi, kdd, cfg)
+                return -jnp.mean(yf) + conditional_loss(logits, cond, mask,
+                                                        cond_spans)
+            ks = jax.random.split(k, P)
+            losses = jax.vmap(per_client)(d_states.d_params, conds, masks, ks)
+            return jnp.mean(losses)          # equal weights — MD-GAN's flaw
+
+        gl, g_grads = jax.value_and_grad(g_loss)(g_params, kd[P])
+        g_params, g_opt = opt.update(g_grads, g_opt, g_params)
+        return g_params, g_opt, d_states, gl
+
+    md_step = jax.jit(md_step)
+    d_bytes = comm_model.pytree_bytes(jax.tree.map(lambda x: x[0],
+                                                   states.d_params))
+    bytes_epoch = comm_model.md_bytes_per_epoch(
+        P, steps_per_epoch, cfg.batch_size,
+        enc.encoded_dim + enc.cond_dim, d_bytes, swap=swap)
+
+    g_params, g_opt = g_state.g_params, g_state.g_opt
+    d_states = states
+    history = []
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed + 1)
+    t0 = time.perf_counter()
+    for ep in range(epochs):
+        for _ in range(steps_per_epoch):
+            c, m, r = zip(*[s.sample(cfg.batch_size) for s in samplers])
+            batches = (jnp.asarray(np.stack(c)), jnp.asarray(np.stack(m)),
+                       jnp.asarray(np.stack(r)))
+            key, k = jax.random.split(key)
+            g_params, g_opt, d_states, gl = md_step(g_params, g_opt,
+                                                    d_states, batches, k)
+        if swap:                                   # p2p discriminator swap
+            perm = rng.permutation(P)
+            d_states = jax.tree.map(lambda x: x[perm], d_states)
+        if eval_real is not None and ((ep + 1) % eval_every == 0 or ep == epochs - 1):
+            synth = sample_synthetic(g_params, jax.random.fold_in(key, ep),
+                                     cfg, spans, enc.cond_dim, eval_samples)
+            rep = similarity_report(eval_real, enc.decode(np.asarray(synth)), schema)
+            rep.update(round=ep + 1, g_loss=float(gl),
+                       t=time.perf_counter() - t0)
+            history.append(rep)
+    dt = time.perf_counter() - t0
+    return FedRunResult("md-tgan", np.full(P, 1.0 / P), history, enc,
+                        g_params, dt, bytes_epoch)

@@ -1,0 +1,101 @@
+"""Privacy-preserving multi-source feature encoding (Fed-TGAN §4.1).
+
+The two-step initialization protocol:
+
+  Step 1 (clients -> federator):  per categorical column j, client i sends
+  its category-frequency table X_ij; per continuous column j, client i sends
+  fitted local VGM parameters VGM_ij.  Row counts N_i are implied by the
+  frequency sums (or sent directly when no categorical column exists).
+
+  Step 2 (federator -> clients):  the federator unions categories into
+  global label encoders LE_j, bootstraps the client VGMs into a global
+  VGM_j per continuous column, and redistributes all encoders.  Every
+  client then builds an identical model input/output structure.
+
+The federator NEVER sees raw rows — only per-column statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..tabular.encoders import ColumnSpec, LabelEncoder, TableEncoders
+from ..tabular.vgm import VGMParams, fit_vgm, merge_client_vgms
+
+
+@dataclasses.dataclass
+class ClientStats:
+    """What one client ships to the federator (the full privacy surface)."""
+    cat_freqs: dict[int, dict[float, float]]   # col -> {raw category: count}
+    vgms: dict[int, VGMParams]                 # col -> local VGM params
+    n_rows: int
+
+
+def compute_client_stats(data: np.ndarray, schema: list[ColumnSpec],
+                         key: jax.Array, *, max_modes: int = 10) -> ClientStats:
+    """Client-side Step 1."""
+    cat_freqs: dict[int, dict[float, float]] = {}
+    vgms: dict[int, VGMParams] = {}
+    keys = jax.random.split(key, len(schema))
+    for j, col in enumerate(schema):
+        if col.kind == "categorical":
+            vals, counts = np.unique(data[:, j], return_counts=True)
+            cat_freqs[j] = {float(v): float(c) for v, c in zip(vals, counts)}
+        else:
+            vgms[j] = fit_vgm(jnp.asarray(data[:, j], jnp.float32), keys[j],
+                              max_modes=col.max_modes)
+    return ClientStats(cat_freqs, vgms, int(data.shape[0]))
+
+
+@dataclasses.dataclass
+class FederatedInit:
+    """Federator-side result of the initialization protocol."""
+    encoders: TableEncoders
+    global_cat_freqs: dict[int, np.ndarray]          # col -> (C,) freq on LE support
+    client_cat_freqs: list[dict[int, np.ndarray]]    # per client, on LE support
+    n_rows: list[int]
+
+    @property
+    def n_total(self) -> int:
+        return sum(self.n_rows)
+
+
+def federated_encoder_init(stats: list[ClientStats], schema: list[ColumnSpec],
+                           key: jax.Array, *, max_modes: int = 10,
+                           samples_cap: int = 20_000) -> FederatedInit:
+    """Federator-side Steps 1+2: build LE_j, global X_j, and VGM_j."""
+    P = len(stats)
+    n_rows = [s.n_rows for s in stats]
+    les: dict[int, LabelEncoder] = {}
+    vgms: dict[int, VGMParams] = {}
+    global_freqs: dict[int, np.ndarray] = {}
+    client_freqs: list[dict[int, np.ndarray]] = [dict() for _ in range(P)]
+
+    keys = jax.random.split(key, len(schema))
+    for j, col in enumerate(schema):
+        if col.kind == "categorical":
+            support = sorted({c for s in stats for c in s.cat_freqs[j]})
+            le = LabelEncoder(np.asarray(support))
+            les[j] = le
+            per_client = np.zeros((P, le.n), np.float64)
+            for i, s in enumerate(stats):
+                for raw, cnt in s.cat_freqs[j].items():
+                    per_client[i, int(np.searchsorted(le.categories, raw))] = cnt
+            total = per_client.sum(axis=0)
+            global_freqs[j] = total / max(total.sum(), 1.0)
+            for i in range(P):
+                row = per_client[i]
+                client_freqs[i][j] = row / max(row.sum(), 1.0)
+        else:
+            vgms[j] = merge_client_vgms([s.vgms[j] for s in stats], n_rows,
+                                        keys[j], max_modes=max_modes,
+                                        samples_cap=samples_cap)
+    enc = TableEncoders(list(schema), les, vgms)
+    return FederatedInit(enc, global_freqs, client_freqs, n_rows)
+
+
+def client_vgm_dicts(stats: list[ClientStats]) -> list[dict[int, VGMParams]]:
+    return [s.vgms for s in stats]

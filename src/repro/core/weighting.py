@@ -1,0 +1,104 @@
+"""Table-similarity-aware weighting scheme (Fed-TGAN §4.2, Fig.4).
+
+Given a P×Q divergence matrix S (client i vs global stats, column j):
+
+  Step 1: column-normalize S               (each column sums to 1)
+  Step 2: row-sum -> per-client score SS_i
+  Step 3: SD_i = (1 - SS_i / sum(SS)) + N_i / N_all
+  Step 4: W = softmax(SD)
+
+``build_divergence_matrix`` computes S from client statistics via JSD
+(categorical) / WD (continuous) — the same protocol data used for encoder
+initialization, so no extra privacy surface.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import divergence as dv
+from ..tabular.encoders import ColumnSpec, TableEncoders
+from ..tabular.vgm import VGMParams, sample_vgm
+
+__all__ = ["weights_from_divergence", "build_divergence_matrix",
+           "fedtgan_weights", "uniform_weights", "quantity_only_weights"]
+
+
+def weights_from_divergence(S: jnp.ndarray, n_rows: jnp.ndarray) -> jnp.ndarray:
+    """Fig.4 steps 1-4.  S: (P, Q) divergences; n_rows: (P,) local row counts.
+
+    Returns (P,) weights summing to 1.
+    """
+    S = jnp.asarray(S, jnp.float32)
+    n_rows = jnp.asarray(n_rows, jnp.float32)
+    # Step 1: per-column normalization (guard all-zero columns => uniform).
+    col_sum = jnp.sum(S, axis=0, keepdims=True)
+    P = S.shape[0]
+    S_norm = jnp.where(col_sum > 0, S / jnp.maximum(col_sum, 1e-12), 1.0 / P)
+    # Step 2: aggregate across columns.
+    SS = jnp.sum(S_norm, axis=1)                                  # (P,)
+    # Step 3: similarity complement + quantity ratio.
+    sim = 1.0 - SS / jnp.maximum(jnp.sum(SS), 1e-12)
+    SD = sim + n_rows / jnp.maximum(jnp.sum(n_rows), 1e-12)
+    # Step 4: softmax.
+    return jax.nn.softmax(SD)
+
+
+def uniform_weights(n_clients: int) -> jnp.ndarray:
+    """Vanilla FL-TGAN: identical weights 1/P."""
+    return jnp.full((n_clients,), 1.0 / n_clients, jnp.float32)
+
+
+def quantity_only_weights(n_rows: jnp.ndarray) -> jnp.ndarray:
+    """Ablation Fed\\SW (§5.3.3): weights from data-quantity ratio only."""
+    n_rows = jnp.asarray(n_rows, jnp.float32)
+    return jax.nn.softmax(n_rows / jnp.maximum(jnp.sum(n_rows), 1e-12))
+
+
+def build_divergence_matrix(
+        schema: list[ColumnSpec],
+        client_cat_freqs: list[dict[int, np.ndarray]],
+        client_vgms: list[dict[int, VGMParams]],
+        global_enc: TableEncoders,
+        global_cat_freqs: dict[int, np.ndarray],
+        key: jax.Array,
+        *, wd_samples: int = 4096) -> jnp.ndarray:
+    """S[i, j] per §4.2 Step 0.
+
+    Categorical j: JSD(X_ij, X_j) on the global category support.
+    Continuous j:  WD(VGM_ij, VGM_j) estimated between bootstrap samples of
+    the client VGM and the global VGM (the paper compares the client datasets
+    D_ij against VGM_j; sampling both sides is the same estimator).
+    """
+    P = len(client_cat_freqs)
+    Q = len(schema)
+    S = np.zeros((P, Q), np.float32)
+    keys = jax.random.split(key, P * Q)
+    for i in range(P):
+        for j, col in enumerate(schema):
+            kij = keys[i * Q + j]
+            if col.kind == "categorical":
+                gj = global_cat_freqs[j]
+                xij = client_cat_freqs[i].get(j)
+                # client freq vector is already on the global support
+                S[i, j] = float(dv.jsd(xij, gj))
+            else:
+                d_ij = sample_vgm(client_vgms[i][j], kij, wd_samples)
+                d_j = sample_vgm(global_enc.vgms[j],
+                                 jax.random.fold_in(kij, 7), wd_samples)
+                # min-max normalize by the global sample range so columns
+                # with large scales don't dominate Step 1's normalization
+                lo, hi = float(jnp.min(d_j)), float(jnp.max(d_j))
+                scale = max(hi - lo, 1e-9)
+                S[i, j] = float(dv.wasserstein_1d(
+                    (d_ij - lo) / scale, (d_j - lo) / scale))
+    return jnp.asarray(S)
+
+
+def fedtgan_weights(schema, client_cat_freqs, client_vgms, global_enc,
+                    global_cat_freqs, n_rows, key) -> jnp.ndarray:
+    """End-to-end: Step 0 matrix + Steps 1-4."""
+    S = build_divergence_matrix(schema, client_cat_freqs, client_vgms,
+                                global_enc, global_cat_freqs, key)
+    return weights_from_divergence(S, jnp.asarray(n_rows))

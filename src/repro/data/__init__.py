@@ -1,0 +1,3 @@
+from .tokens import (TokenDatasetSpec, synthetic_token_batches,
+                     client_token_streams, token_frequency_stats,
+                     fed_weights_from_token_stats)

@@ -1,0 +1,3 @@
+from .ctgan import CTGANConfig
+from .sampler import ConditionalSampler
+from .trainer import GANState, init_gan_state, make_train_steps, sample_synthetic

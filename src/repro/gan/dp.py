@@ -1,0 +1,114 @@
+"""Differentially-private CTGAN training (the paper's §5.5 future work).
+
+DP-SGD (Abadi et al. 2016) applied to the DISCRIMINATOR — the only network
+that touches real rows; the generator never sees data, so by
+post-processing its updates inherit the discriminator's guarantee
+(DP-GAN / PATE-GAN rationale, refs [23,25] of the paper).
+
+The privacy unit is one PacGAN pack (``pac`` rows are judged jointly, so
+per-example clipping must clip per-pack).  Per-pack gradients come from a
+vmapped ``jax.grad`` over packs; each is L2-clipped to ``l2_clip``, summed,
+and Gaussian noise N(0, (noise_mult * l2_clip)^2) is added.
+
+``dp_epsilon`` gives the standard strong-composition estimate
+eps ~= q * sqrt(2 T ln(1/delta)) / sigma (a rough upper bound; a full RDP
+accountant is drop-in replaceable).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import adam
+from ..tabular.encoders import SpanInfo
+from .ctgan import (CTGANConfig, apply_activations, conditional_loss,
+                    discriminator_forward, generator_forward,
+                    gradient_penalty)
+from .trainer import GANState
+
+
+def dp_epsilon(steps: int, batch: int, n_rows: int, noise_mult: float,
+               delta: float = 1e-5) -> float:
+    """Approximate (eps, delta) after ``steps`` DP updates."""
+    q = min(batch / max(n_rows, 1), 1.0)
+    return q * math.sqrt(2.0 * steps * math.log(1.0 / delta)) / noise_mult
+
+
+def _clip_tree(tree, max_norm):
+    leaves = jax.tree.leaves(tree)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / gn)
+    return jax.tree.map(lambda g: g * scale, tree)
+
+
+def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
+                        cond_spans: Sequence[SpanInfo], *,
+                        l2_clip: float = 1.0, noise_mult: float = 1.0):
+    """Like trainer.make_train_steps but with a DP discriminator update.
+    Returns ``step(state, batch) -> (state, metrics)``."""
+    n_hidden = len(cfg.gen_hidden)
+    opt = adam(cfg.lr, cfg.b1, cfg.b2)
+    spans = tuple(spans)
+    cond_spans = tuple(cond_spans)
+    pac = cfg.pac
+
+    def d_loss_pack(d_params, pack_real, pack_cond, fake_pack, key):
+        """Loss contribution of ONE pack (pac rows)."""
+        k1, k2, kgp = jax.random.split(key, 3)
+        real_in = jnp.concatenate([pack_real, pack_cond], axis=1)
+        fake_in = fake_pack
+        y_fake = discriminator_forward(d_params, fake_in, k1, cfg)
+        y_real = discriminator_forward(d_params, real_in, k2, cfg)
+        gp = gradient_penalty(d_params, real_in, fake_in, kgp, cfg)
+        return jnp.mean(y_fake) - jnp.mean(y_real) + cfg.gp_lambda * gp
+
+    def g_loss_fn(g_params, d_params, cond, mask, key):
+        kz, ka, kd = jax.random.split(key, 3)
+        z = jax.random.normal(kz, (cond.shape[0], cfg.z_dim))
+        logits = generator_forward(g_params, z, cond, n_hidden)
+        fake = apply_activations(logits, spans, ka, cfg.tau)
+        fake_in = jnp.concatenate([fake, cond], axis=1)
+        y_fake = discriminator_forward(d_params, fake_in, kd, cfg)
+        return -jnp.mean(y_fake) + conditional_loss(logits, cond, mask,
+                                                    cond_spans)
+
+    def step(state: GANState, batch):
+        cond, mask, real = batch
+        B = real.shape[0]
+        n_packs = B // pac
+        key, kz, ka, kd, kn, kg = jax.random.split(state.rng, 6)
+
+        # one shared fake batch (public: generated), packed like the real
+        z = jax.random.normal(kz, (B, cfg.z_dim))
+        logits = generator_forward(state.g_params, z, cond, n_hidden)
+        fake = apply_activations(logits, spans, ka, cfg.tau)
+        fake_in = jnp.concatenate([fake, cond], axis=1)
+
+        packs_real = real.reshape(n_packs, pac, -1)
+        packs_cond = cond.reshape(n_packs, pac, -1)
+        packs_fake = fake_in.reshape(n_packs, pac, -1)
+        pack_keys = jax.random.split(kd, n_packs)
+
+        per_pack = jax.vmap(jax.grad(d_loss_pack),
+                            in_axes=(None, 0, 0, 0, 0))(
+            state.d_params, packs_real, packs_cond, packs_fake, pack_keys)
+        clipped = jax.vmap(lambda g: _clip_tree(g, l2_clip))(per_pack)
+        summed = jax.tree.map(lambda g: jnp.sum(g, axis=0), clipped)
+        noise_keys = jax.random.split(kn, len(jax.tree.leaves(summed)))
+        flat, tdef = jax.tree.flatten(summed)
+        noisy = [g + noise_mult * l2_clip *
+                 jax.random.normal(k, g.shape, g.dtype)
+                 for g, k in zip(flat, noise_keys)]
+        d_grads = jax.tree.map(lambda g: g / n_packs, tdef.unflatten(noisy))
+        d_params, d_opt = opt.update(d_grads, state.d_opt, state.d_params)
+
+        gl, g_grads = jax.value_and_grad(g_loss_fn)(
+            state.g_params, d_params, cond, mask, kg)
+        g_params, g_opt = opt.update(g_grads, state.g_opt, state.g_params)
+        new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1, key)
+        return new, {"g_loss": gl}
+
+    return step

@@ -1,0 +1,73 @@
+"""CTGAN's training-by-sampling data sampler (host side).
+
+Pre-indexes encoded rows by (condition span, category) so each step can
+(1) pick a condition column uniformly, (2) pick a category by log-frequency,
+(3) fetch a real row matching it — exactly CTGAN's procedure.  Produces
+numpy batches that the jitted train steps consume; the federated drivers
+pre-sample whole rounds so local steps can run inside ``lax.scan``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..tabular.encoders import SpanInfo, TableEncoders
+
+
+class ConditionalSampler:
+    def __init__(self, encoded: np.ndarray, encoders: TableEncoders,
+                 seed: int = 0):
+        self.encoded = np.asarray(encoded, np.float32)
+        self.spans: list[SpanInfo] = encoders.condition_spans()
+        self.cond_dim = sum(s.width for s in self.spans)
+        self.n_spans = len(self.spans)
+        self.rng = np.random.default_rng(seed)
+
+        # rows by (span, argmax category); log-frequency category probs
+        self.rows_by_cat: list[list[np.ndarray]] = []
+        self.cat_logfreq: list[np.ndarray] = []
+        for s in self.spans:
+            onehot = self.encoded[:, s.start:s.start + s.width]
+            cat = onehot.argmax(axis=1)
+            rows = [np.where(cat == c)[0] for c in range(s.width)]
+            freq = np.array([len(r) for r in rows], np.float64)
+            logf = np.log(freq + 1.0)
+            self.rows_by_cat.append(rows)
+            self.cat_logfreq.append(logf / max(logf.sum(), 1e-12))
+
+        self._span_offsets = np.cumsum([0] + [s.width for s in self.spans])
+
+    def sample(self, batch: int):
+        """Returns (cond, mask, real_rows):
+          cond (B, cond_dim) float32, mask (B, n_spans) float32,
+          real (B, data_dim) float32 rows consistent with cond."""
+        cond = np.zeros((batch, self.cond_dim), np.float32)
+        mask = np.zeros((batch, self.n_spans), np.float32)
+        rows = np.empty(batch, np.int64)
+        span_ids = self.rng.integers(self.n_spans, size=batch)
+        for i, si in enumerate(span_ids):
+            probs = self.cat_logfreq[si]
+            c = self.rng.choice(len(probs), p=probs)
+            # guard empty category (possible on tiny client shards)
+            cand = self.rows_by_cat[si][c]
+            if len(cand) == 0:
+                c = int(np.argmax([len(r) for r in self.rows_by_cat[si]]))
+                cand = self.rows_by_cat[si][c]
+            rows[i] = self.rng.choice(cand)
+            cond[i, self._span_offsets[si] + c] = 1.0
+            mask[i, si] = 1.0
+        return cond, mask, self.encoded[rows]
+
+    def sample_uniform_rows(self, batch: int) -> np.ndarray:
+        idx = self.rng.integers(self.encoded.shape[0], size=batch)
+        return self.encoded[idx]
+
+    def presample_rounds(self, rounds: int, steps_per_round: int, batch: int):
+        """(rounds, steps, ...) arrays for scan-based local training."""
+        conds, masks, reals = [], [], []
+        for _ in range(rounds * steps_per_round):
+            c, m, r = self.sample(batch)
+            conds.append(c); masks.append(m); reals.append(r)
+        def pack(xs):
+            a = np.stack(xs)
+            return a.reshape(rounds, steps_per_round, *a.shape[1:])
+        return pack(conds), pack(masks), pack(reals)

@@ -1,0 +1,108 @@
+"""Chunkwise mLSTM Pallas TPU kernel (xLSTM matrix-memory cell).
+
+§Roofline shows xlstm-1.3b training is bound by the recurrent blocks; the
+chunkwise mLSTM is the MXU-friendly formulation (DESIGN.md §3) and this
+kernel fuses one chunk's worth of it: intra-chunk quadratic attention with
+stabilized exponential gating + the inter-chunk state contribution, with
+the (C, n, m) recurrent state carried in VMEM scratch across the
+sequentially-iterated chunk grid dimension.
+
+Grid: (B*H, n_chunks) — chunks iterate innermost so scratch carries state.
+VMEM working set: q/k/v tiles (3*L*hd) + (L,L) gate matrix + state (hd*hd).
+
+Validated in interpret mode against ``ref.mlstm_chunk_ref`` (== the
+per-step recurrence oracle ``models.ssm.mlstm_scan_ref``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, lf_ref, li_ref, o_ref,
+                  C_ref, n_ref, m_ref, *, L: int, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (L, hd), pre-scaled
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lf = lf_ref[0, :, 0].astype(jnp.float32)             # (L,)
+    li = li_ref[0, :, 0].astype(jnp.float32)
+
+    b = jnp.cumsum(lf)                                   # (L,) cumulative decay
+    m_prev = m_ref[0, 0]
+    C_prev = C_ref[...]
+    n_prev = n_ref[0, :]
+
+    # stabilizer per position: max(b_i + m_prev, max_j<=i (b_i - b_j + li_j))
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    logw = b[:, None] - b[None, :] + li[None, :]         # (L, L)
+    intra_max = jnp.max(jnp.where(tri, logw, NEG_INF), axis=1)
+    m_pos = jnp.maximum(b + m_prev, intra_max)           # (L,)
+
+    inter_w = jnp.exp(b + m_prev - m_pos)                # (L,)
+    num_inter = jax.lax.dot(q, C_prev) * inter_w[:, None]        # (L, hd)
+    den_inter = (q @ n_prev) * inter_w                   # (L,)
+
+    w = jnp.where(tri, jnp.exp(logw - m_pos[:, None]), 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * w  # (L, L)
+    num = num_inter + jax.lax.dot(scores, v)
+    den = jnp.maximum(jnp.abs(den_inter + jnp.sum(scores, axis=1)),
+                      jnp.exp(-m_pos))
+    o_ref[0, ...] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # ---- carry state to end of chunk ----
+    b_last = b[-1]
+    m_new = jnp.maximum(b_last + m_prev, jnp.max(b_last - b + li))
+    carry_w = jnp.exp(b_last + m_prev - m_new)
+    kv_w = jnp.exp(b_last - b + li - m_new)              # (L,)
+    C_ref[...] = carry_w * C_prev + jax.lax.dot_general(
+        k * kv_w[:, None], v, (((0,), (0,)), ((), ())))
+    n_ref[0, :] = carry_w * n_prev + jnp.sum(k * kv_w[:, None], axis=0)
+    m_ref[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                log_f: jnp.ndarray, log_i: jnp.ndarray, *,
+                chunk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: (BH, S, hd) with q PRE-SCALED by 1/sqrt(hd); log_f/log_i:
+    (BH, S).  Returns the normalized hidden states (BH, S, hd) BEFORE the
+    output gate (the caller applies o-gate and the out projection)."""
+    BH, S, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_mlstm_kernel, L=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, log_f[..., None], log_i[..., None])

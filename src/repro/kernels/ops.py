@@ -1,0 +1,70 @@
+"""Jit'd public wrappers for the Pallas kernels with jnp fallbacks.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+lower to Mosaic.  ``use_pallas=False`` routes to the ref oracles so every
+call site can be flipped for A/B testing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .mlstm_chunk import mlstm_chunk as _mlstm_chunk
+from .vgm_encode import vgm_encode as _vgm_encode
+from .weighted_agg import weighted_agg as _weighted_agg
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    use_pallas=True, interpret=None, **kw):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    interp = (not _ON_TPU) if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=interp, **kw)
+
+
+def vgm_encode(x, params, key, *, use_pallas=True, interpret=None,
+               block_n=1024):
+    """Drop-in for tabular.vgm.encode_column: params is a VGMParams; the
+    Gumbel noise is drawn here so kernel and ref see identical randoms."""
+    K = params.means.shape[0]
+    logw = jnp.where(params.valid,
+                     jnp.log(jnp.maximum(params.weights, 1e-12)), -1e30)
+    gumbel = jax.random.gumbel(key, (x.shape[0], K), jnp.float32)
+    if not use_pallas:
+        return ref.vgm_encode_ref(x, params.means, params.stds, logw, gumbel)
+    interp = (not _ON_TPU) if interpret is None else interpret
+    return _vgm_encode(x, params.means, params.stds, logw, gumbel,
+                       block_n=block_n, interpret=interp)
+
+
+def mlstm_chunk(q, k, v, log_f, log_i, *, use_pallas=True, interpret=None,
+                chunk=128):
+    """Chunkwise mLSTM hidden states (pre-o-gate); q pre-scaled."""
+    if not use_pallas:
+        return ref.mlstm_chunk_ref(q, k, v, log_f, log_i)
+    interp = (not _ON_TPU) if interpret is None else interpret
+    return _mlstm_chunk(q, k, v, log_f, log_i, chunk=chunk, interpret=interp)
+
+
+def weighted_average_flat(stacked, weights, *, use_pallas=True,
+                          interpret=None, block_d=16_384):
+    """stacked (P, D) -> (D,)."""
+    if not use_pallas:
+        return ref.weighted_agg_ref(stacked, weights)
+    interp = (not _ON_TPU) if interpret is None else interpret
+    return _weighted_agg(stacked, weights, block_d=block_d, interpret=interp)
+
+
+def weighted_average_tree(stacked_tree, weights, **kw):
+    """Pytree version of the federator merge (leaves carry a leading client
+    axis P) — the kernel-backed twin of core.aggregation.weighted_average."""
+    def one(leaf):
+        P = leaf.shape[0]
+        flat = leaf.reshape(P, -1)
+        return weighted_average_flat(flat, weights, **kw).reshape(leaf.shape[1:])
+    return jax.tree.map(one, stacked_tree)

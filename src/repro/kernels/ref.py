@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` mirrors its kernel's signature exactly; kernel tests sweep
+shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int | None = None) -> jnp.ndarray:
+    """q: (B, H, Sq, hd); k, v: (B, Kh, Sk, hd).  Full-matrix softmax."""
+    B, H, Sq, hd = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    g = H // Kh
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def vgm_encode_ref(x: jnp.ndarray, means: jnp.ndarray, stds: jnp.ndarray,
+                   log_weights: jnp.ndarray, gumbel: jnp.ndarray
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """CTGAN mode-specific normalization with pre-drawn Gumbel noise.
+
+    x: (N,); means/stds/log_weights: (K,); gumbel: (N, K).
+    Returns alpha (N,), onehot beta (N, K).
+    """
+    xf = x.astype(jnp.float32)
+    z = (xf[:, None] - means[None, :]) / stds[None, :]
+    log_pdf = -0.5 * z * z - jnp.log(stds)[None, :] - 0.5 * math.log(2 * math.pi)
+    logits = log_pdf + log_weights[None, :]
+    comp = jnp.argmax(logits + gumbel, axis=1)
+    mu = means[comp]
+    sd = stds[comp]
+    alpha = jnp.clip((xf - mu) / (4.0 * sd), -1.0, 1.0)
+    beta = jax.nn.one_hot(comp, means.shape[0], dtype=jnp.float32)
+    return alpha, beta
+
+
+def mlstm_chunk_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    log_f: jnp.ndarray, log_i: jnp.ndarray) -> jnp.ndarray:
+    """Per-step stabilized mLSTM recurrence (oracle for mlstm_chunk).
+
+    q/k/v: (BH, S, hd), q pre-scaled; log_f/log_i: (BH, S).
+    """
+    BH, S, hd = q.shape
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, lf, li = inp
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)[:, None, None]
+        ig = jnp.exp(li - m_new)[:, None, None]
+        C = fg * C + ig * (k_t[:, :, None] * v_t[:, None, :])
+        n = fg[:, :, 0] * n + ig[:, :, 0] * k_t
+        num = jnp.einsum("bde,bd->be", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.sum(n * q_t, -1)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[:, None]
+
+    carry = (jnp.zeros((BH, hd, hd), jnp.float32),
+             jnp.zeros((BH, hd), jnp.float32),
+             jnp.zeros((BH,), jnp.float32))
+    xs = (q.transpose(1, 0, 2).astype(jnp.float32),
+          k.transpose(1, 0, 2).astype(jnp.float32),
+          v.transpose(1, 0, 2).astype(jnp.float32),
+          log_f.T.astype(jnp.float32), log_i.T.astype(jnp.float32))
+    _, hs = jax.lax.scan(step, carry, xs)
+    return hs.transpose(1, 0, 2).astype(q.dtype)
+
+
+def weighted_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (P, D); weights: (P,) -> (D,) weighted average (weights are
+    normalized defensively, matching core.aggregation.weighted_average)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    return jnp.sum(stacked.astype(jnp.float32) * w[:, None], axis=0
+                   ).astype(stacked.dtype)

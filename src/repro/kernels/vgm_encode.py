@@ -1,0 +1,81 @@
+"""VGM mode-specific normalization Pallas kernel.
+
+The tabular-encoding hot loop of Fed-TGAN/CTGAN: for every cell of a
+continuous column, evaluate K Gaussian modes, Gumbel-sample a mode from the
+responsibilities, and emit (alpha, one-hot beta).  On a 40k x 30-column
+table re-encoded every round this is the dominant client-side preprocessing
+cost; it is embarrassingly parallel over rows — ideal VPU work.
+
+Tiling: rows are tiled (block_n); the K mode parameters are broadcast into
+each tile (K is padded to the 128-lane multiple by ``ops.vgm_encode``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+_LOG2PI = math.log(2.0 * math.pi)
+
+
+def _vgm_kernel(x_ref, means_ref, stds_ref, logw_ref, gumbel_ref,
+                alpha_ref, beta_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (bn, 1)
+    means = means_ref[...].astype(jnp.float32)          # (1, K)
+    stds = stds_ref[...].astype(jnp.float32)
+    logw = logw_ref[...].astype(jnp.float32)
+    g = gumbel_ref[...].astype(jnp.float32)             # (bn, K)
+
+    z = (x - means) / stds
+    logits = -0.5 * z * z - jnp.log(stds) - 0.5 * _LOG2PI + logw + g
+    comp = jnp.argmax(logits, axis=1)                   # (bn,)
+    K = means.shape[1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+              == comp[:, None]).astype(jnp.float32)
+    mu = jnp.sum(onehot * means, axis=1)
+    sd = jnp.sum(onehot * stds, axis=1)
+    alpha = jnp.clip((x[:, 0] - mu) / (4.0 * sd), -1.0, 1.0)
+    alpha_ref[...] = alpha[:, None]
+    beta_ref[...] = onehot
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def vgm_encode(x: jnp.ndarray, means: jnp.ndarray, stds: jnp.ndarray,
+               log_weights: jnp.ndarray, gumbel: jnp.ndarray, *,
+               block_n: int = 1024, interpret: bool = False):
+    """x: (N,); means/stds/log_weights: (K,); gumbel: (N, K).
+    Returns (alpha (N,), beta (N, K)).  Invalid modes must carry
+    log_weights = -inf (the ops wrapper arranges K-padding that way)."""
+    N = x.shape[0]
+    K = means.shape[0]
+    pad_n = (-N) % block_n
+    if pad_n:
+        x = jnp.pad(x, (0, pad_n))
+        gumbel = jnp.pad(gumbel, ((0, pad_n), (0, 0)))
+    Np = N + pad_n
+
+    alpha, beta = pl.pallas_call(
+        _vgm_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Np, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x[:, None], means[None, :], stds[None, :], log_weights[None, :], gumbel)
+    return alpha[:N, 0], beta[:N]

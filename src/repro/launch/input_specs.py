@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  This is the dry-run's data pipeline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, InputShape
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs: dict = {"labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.embed_inputs:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        specs["features"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.xattn_tokens:
+        specs["vision"] = jax.ShapeDtypeStruct((B, cfg.xattn_tokens, cfg.d_model),
+                                               jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B = shape.global_batch
+    specs: dict = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if not cfg.embed_inputs:
+        specs["features"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+        specs.pop("token")
+        specs["token"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)  # unused path safety
+    if cfg.xattn_tokens:
+        specs["vision"] = jax.ShapeDtypeStruct((B, cfg.xattn_tokens, cfg.d_model),
+                                               jnp.bfloat16)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    if shape.mode == "train":
+        return train_input_specs(cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,343 @@
+"""Roofline-term extraction from compiled HLO (no hardware required).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — a scan of 8 matmuls reports 1 matmul of flops), so scanned
+layer stacks would be undercounted by ~n_layers.  This module therefore
+does its own walk of ``compiled.as_text()``:
+
+  * builds the computation call graph (while ``body=``/``condition=``,
+    fusion ``calls=``, reduce ``to_apply=``), propagating multipliers from
+    ``backend_config={"known_trip_count":{"n":...}}``;
+  * FLOPs: 2 * prod(result dims) * prod(contracting dims) per dot;
+  * HBM bytes: operand+result bytes of materialized instructions
+    (fusion internals excluded — a fusion reads its operands and writes
+    its result once);
+  * collective bytes: per-op convention — all-gather: result bytes;
+    all-reduce: 2x operand (ring); reduce-scatter / all-to-all /
+    collective-permute: operand bytes.  Multiplied by loop trip counts.
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3 links usable per direction is NOT assumed; the
+collective term uses the single-link figure, conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+                "f8e5m2": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]))")
+_TRIP_RE = re.compile(r'known_trip_count\D{0,8}(\d+)')
+_CALLEE_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dims, m.group(1)
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+
+_SKIP_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "iota", "copy-start", "copy-done",
+             "partition-id", "replica-id")
+
+
+def _opname(rhs: str) -> str:
+    """Instruction opcode: the identifier right before the first '(' that
+    follows the (possibly tuple-typed) result type."""
+    i = 0
+    if rhs.startswith("("):           # tuple result type
+        depth = 0
+        for j, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                i = j + 1
+                break
+    p = rhs.find("(", i)
+    if p < 0:
+        return ""
+    return rhs[:p].split()[-1].lstrip("%") if rhs[:p].split() else ""
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def analyze_hlo(text: str, default_trip: int = 1) -> HLOStats:
+    # ---- split into computations -------------------------------------
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            # parameters contribute shapes
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+
+    # ---- per-computation symbol tables + instruction lists -----------
+    sym: dict[str, dict[str, str]] = defaultdict(dict)
+    # re-scan headers for param shapes
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cname, args = hdr.group(1), hdr.group(2)
+            for pname, ptype in _PARAM_RE.findall(args):
+                sym[cname][pname] = ptype
+    for cname, lines in comps.items():
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if d:
+                sym[cname][d.group(1)] = d.group(2)
+
+    # ---- call graph with multipliers ----------------------------------
+    # edges: caller -> (callee, mult); while body gets trip count
+    edges: list[tuple[str, str, float]] = []
+    fusion_bodies: set[str] = set()
+    unknown_loops = 0
+    for cname, lines in comps.items():
+        for line in lines:
+            callees = _CALLEE_RE.findall(line)
+            if not callees:
+                continue
+            mult = 1.0
+            if " while(" in line:
+                t = _TRIP_RE.search(line)
+                if t:
+                    mult = float(t.group(1))
+                else:
+                    mult = float(default_trip)
+                    unknown_loops += 1
+            if " fusion(" in line:
+                fusion_bodies.update(callees)
+            for callee in callees:
+                edges.append((cname, callee, mult))
+
+    # computations whose ROOT is a dynamic-update-slice: fusions calling
+    # them are in-place loop-carry updates — traffic is ~the update slice,
+    # NOT the whole carried buffer (otherwise a 4096-step scan stacking
+    # (S,B,D) outputs gets charged S x the full buffer).
+    dus_roots: set[str] = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            if line.lstrip().startswith("ROOT") and \
+                    " dynamic-update-slice(" in line:
+                dus_roots.add(cname)
+
+    # propagate multipliers from entry (computation not referenced by others)
+    referenced = {c for _, c, _ in edges}
+    entries = [c for c in comps if c not in referenced]
+    mult_of: dict[str, float] = {c: 1.0 for c in entries}
+    # simple relaxation (call graph is a DAG in HLO)
+    changed = True
+    it = 0
+    while changed and it < 100:
+        changed = False
+        it += 1
+        for caller, callee, m in edges:
+            base = mult_of.get(caller)
+            if base is None:
+                continue
+            new = base * m
+            if mult_of.get(callee, 0.0) < new:
+                mult_of[callee] = new
+                changed = True
+
+    # ---- accumulate costs ---------------------------------------------
+    stats = HLOStats(unknown_trip_loops=unknown_loops)
+    coll = defaultdict(float)
+    for cname, lines in comps.items():
+        mult = mult_of.get(cname, 1.0)
+        in_fusion = cname in fusion_bodies
+        table = sym[cname]
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            rhs = d.group(2)
+            # ---- dot flops (count also inside fusions) ----
+            if " dot(" in rhs or rhs.startswith("dot(") or " dot(" in f" {rhs}":
+                res = _shape_dims(rhs)
+                mm = re.search(r"dot\(([^)]*)\)", rhs)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                if res and mm and cdims is not None:
+                    operands = [o.strip().lstrip("%") for o in mm.group(1).split(",")]
+                    lhs_type = table.get(operands[0], "")
+                    lhs = _shape_dims(lhs_type)
+                    contract = 1
+                    if lhs:
+                        for ci in (cdims.group(1).split(",") if cdims.group(1) else []):
+                            contract *= lhs[0][int(ci)]
+                    n_res = 1
+                    for dd in res[0]:
+                        n_res *= dd
+                    stats.flops += 2.0 * n_res * contract * mult
+            if " convolution(" in rhs:
+                res = _shape_dims(rhs)
+                if res:
+                    n_res = 1
+                    for dd in res[0]:
+                        n_res *= dd
+                    # approximate: 2 * out * (kernel window) — window unknown
+                    stats.flops += 2.0 * n_res * mult
+            # ---- collectives ----
+            opname = _opname(rhs)
+            for ckind in _COLLECTIVES:
+                if opname == ckind or opname == f"{ckind}-start":
+                    nbytes = _shape_bytes(rhs.split("(")[0])
+                    mm = re.search(rf"{ckind}[\w\-]*\(([^)]*)\)", rhs)
+                    op_bytes = 0
+                    if mm:
+                        for o in mm.group(1).split(","):
+                            op_bytes += _shape_bytes(table.get(o.strip().lstrip("%"), ""))
+                    if ckind == "all-gather":
+                        moved = nbytes
+                    elif ckind == "all-reduce":
+                        moved = 2 * op_bytes
+                    else:
+                        moved = op_bytes
+                    coll[ckind] += moved * mult
+                    stats.collective_bytes += moved * mult
+                    break
+            # ---- HBM traffic (skip fusion internals & no-ops) ----
+            if in_fusion:
+                continue
+            op = _opname(rhs)
+            if op in _SKIP_OPS:
+                continue
+            res_bytes = _shape_bytes(rhs.split("(")[0])
+            # slicing ops touch ~the slice, not the full buffer; updates
+            # touch ~the update twice (read-modify-write).
+            if op in ("dynamic-slice", "gather", "slice"):
+                stats.hbm_bytes += 2 * res_bytes * mult
+                continue
+            mm = re.search(r"\(([^)]*)\)", rhs[rhs.find(op):])
+            op_sizes = []
+            if mm:
+                for o in mm.group(1).split(","):
+                    o = o.strip().lstrip("%")
+                    if o in table:
+                        op_sizes.append(_shape_bytes(table[o]))
+            if op in ("dynamic-update-slice", "scatter"):
+                upd = min([s for s in op_sizes if s > 0] or [res_bytes])
+                stats.hbm_bytes += 2 * upd * mult
+                continue
+            if op == "fusion":
+                callee = _CALLEE_RE.search(rhs)
+                if callee and callee.group(1) in dus_roots:
+                    # in-place update fusion: charge operands other than
+                    # the carried buffer (== result shape) twice.
+                    others = [s for s in op_sizes if s != res_bytes]
+                    upd = 2 * sum(min(s, res_bytes) for s in others) or \
+                        2 * min(op_sizes or [res_bytes])
+                    stats.hbm_bytes += upd * mult
+                    continue
+            # fusions may take whole stacked-param arrays as operands and
+            # slice them internally — cap each operand at 4x the result so
+            # loop iterations aren't charged the full stack (reductions up
+            # to 4:1 stay exact; beyond that we under-count, documented).
+            cap = 4 * max(res_bytes, 1)
+            op_bytes = sum(min(s, cap) for s in op_sizes)
+            stats.hbm_bytes += (res_bytes + op_bytes) * mult
+    stats.collectives = dict(coll)
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (hlo_flops is per-device)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "useful_flops_ratio": self.useful_flops_ratio}
+
+
+def roofline_from_stats(stats: HLOStats, *, arch: str, shape: str, mesh: str,
+                        chips: int, model_flops: float) -> RooflineReport:
+    """Stats are PER-DEVICE (SPMD module is per-device), so terms divide by
+    per-chip peak only."""
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=stats.flops, hbm_bytes=stats.hbm_bytes,
+        collective_bytes=stats.collective_bytes,
+        model_flops=model_flops,
+        compute_s=stats.flops / PEAK_FLOPS,
+        memory_s=stats.hbm_bytes / HBM_BW,
+        collective_s=stats.collective_bytes / ICI_BW,
+    )
+
+
+def model_flops_for(cfg, shape, mode: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference forward."""
+    n_active = cfg.active_param_count()
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,190 @@
+"""Sharding policy: param/batch/cache PartitionSpecs for any arch x mesh.
+
+Policy (DESIGN.md §4):
+  * ``tp`` ("model" axis): tensor-parallel dim of every big weight
+    (H*hd / d_ff / vocab / d_inner / expert axis).
+  * ``fsdp`` (the data axes): the other big dim of each weight is sharded
+    over data+pod (ZeRO-3 style) so >=100B configs fit; disable with
+    ``fsdp=False`` (then weights are replicated over data — faster for
+    small models, a §Perf lever).
+  * Experts: E >= tp-size -> expert-parallel (E over model) and d_ff over
+    fsdp; else per-expert d_ff over model, d_model over fsdp.
+  * Any annotated dim that does not divide its axis size falls back to
+    replication on that dim (e.g. hubert's vocab=504) — recorded by the
+    caller via ``spec_fallbacks``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ShardPolicy:
+    mesh: Any
+    fsdp: bool = True
+    # MoE expert-weight layout (§Perf lever):
+    #   auto: E>=tp -> experts over model + d_ff over data;
+    #         else  -> d_model over data + d_ff over model
+    #   f2d:  d_ff over (data x model) combined — contraction dims unsharded,
+    #         so expert matmuls produce no cross-data partial-sum all-reduces
+    moe_mode: str = "auto"
+
+    @property
+    def dp(self) -> tuple[str, ...]:
+        return tuple(a for a in self.mesh.axis_names if a in ("pod", "data"))
+
+    @property
+    def tp(self) -> str:
+        return "model"
+
+    @property
+    def fsdp_axes(self):
+        return self.dp if self.fsdp else None
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+# rule table: (path regex, spec template aligned to TRAILING dims).
+# 'T' = tensor axis, 'F' = fsdp axes, None = replicated.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",                ("T", "F")),
+    (r"lm_head$",              ("F", "T")),
+    (r"in_proj$",              (None, "T")),
+    (r"experts/(w_gate|w_up)$",  ("EXP",)),
+    (r"experts/w_down$",         ("EXPD",)),
+    (r"router$",               (None, None)),
+    (r"(wq|wk|wv)$",           ("F", "T")),
+    (r"(wq|wk|wv)_bias$",      ("T",)),
+    (r"wo$",                   ("T", "F")),
+    (r"(w_gate|w_up)$",        ("F", "T")),
+    (r"w_down$",               ("T", "F")),
+    (r"(ssm_in|ssm_gate)$",    ("F", "T")),
+    (r"ssm_out$",              ("T", "F")),
+    (r"(ssm_dt|ssm_bc|ssm_a|ssm_conv)$", ("T", None)),
+    (r"(ssm_d|ssm_dt_bias)$",  ("T",)),
+    (r"(gate_i|gate_f|gate_o)$", ("F", None)),
+    (r"slstm_wx$",             ("F", "T")),
+    # slstm_r is tiny (H x hd x 4hd) and lives INSIDE the per-step scan:
+    # sharding it makes XLA all-reduce its gradient every timestep
+    # (§Perf xlstm iteration 2: 192 GiB/step) — replicate it.
+    (r"slstm_r$",              (None, None, None)),
+]
+
+
+def _resolve(template, pol: ShardPolicy, shape, expert_parallel: bool):
+    if template == ("EXP",):       # (E, D, F)
+        if pol.moe_mode == "f2d":
+            template = (None, None, "FT")
+        elif pol.moe_mode == "ep_pad":
+            template = ("F!", None, "T")    # E over data, GSPMD-padded
+        else:
+            template = ("T", None, "F") if expert_parallel else (None, "F", "T")
+    elif template == ("EXPD",):    # (E, F, D)
+        if pol.moe_mode == "f2d":
+            template = (None, "FT", None)
+        elif pol.moe_mode == "ep_pad":
+            template = ("F!", "T", None)
+        else:
+            template = ("T", "F", None) if expert_parallel else (None, "T", "F")
+    spec = []
+    offset = len(shape) - len(template)
+    out = [None] * len(shape)
+    for i, t in enumerate(template):
+        dim = shape[offset + i]
+        uneven_ok = False
+        if t == "T":
+            ax = pol.tp
+        elif t == "F":
+            ax = pol.fsdp_axes
+        elif t == "F!":                      # allow GSPMD padding (uneven)
+            ax = pol.dp
+            uneven_ok = True
+        elif t == "FT":
+            ax = tuple(pol.dp) + (pol.tp,)
+        else:
+            ax = None
+        if ax is not None and not uneven_ok and dim % pol.axis_size(ax) != 0:
+            ax = None                        # divisibility fallback
+        out[offset + i] = ax
+    return P(*out)
+
+
+def build_param_specs(param_shapes: PyTree, pol: ShardPolicy,
+                      n_experts: int = 0) -> PyTree:
+    expert_parallel = n_experts >= pol.mesh.shape["model"]
+
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        for pat, template in _PARAM_RULES:
+            if re.search(pat, path):
+                return _resolve(template, pol, leaf.shape, expert_parallel)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def build_batch_specs(batch_shapes: PyTree, pol: ShardPolicy) -> PyTree:
+    """Batch dim (leading) over dp when divisible, else replicated."""
+    dp = pol.dp
+    dp_size = pol.axis_size(dp)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % dp_size == 0:
+            spec[0] = dp
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def build_cache_specs(cache_shapes: PyTree, pol: ShardPolicy) -> PyTree:
+    """Decode caches: leaves are (n_rep, B, ...).  Shard B over dp when
+    divisible; otherwise (long-context, B=1) shard the longest trailing
+    dim over dp (sequence/context parallelism for the KV ring)."""
+    dp = pol.dp
+    dp_size = pol.axis_size(dp)
+
+    tp = pol.tp
+    tp_size = pol.axis_size(tp)
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dp_size == 0:
+            spec[1] = dp
+        elif len(shape) > 2:
+            order = sorted(range(2, len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if shape[i] % dp_size == 0 and shape[i] >= dp_size:
+                    spec[i] = dp
+                    break
+        # KV-cache-like leaves (n_rep, B, S, K, hd): shard hd over model so
+        # the layer-scan's preferred in-loop sharding (kv x hd over model)
+        # is reachable without gathering the whole stacked cache at entry
+        # (§Perf llama3 x decode iteration 3).
+        if len(shape) == 5 and shape[-1] % tp_size == 0 and spec[-1] is None:
+            spec[-1] = tp
+        return P(*spec)
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def named(mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

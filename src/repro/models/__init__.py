@@ -1,0 +1,2 @@
+from .config import ModelConfig, InputShape, INPUT_SHAPES
+from .model import Transformer, TrainState, make_train_step, make_serve_step, ShardHints

@@ -1,0 +1,266 @@
+"""GQA attention: RoPE variants, causal/bidirectional, sliding window,
+cross-attention, chunked-query memory behaviour, and KV-cache decode.
+
+The jnp path here is the reference/dry-run implementation; the Pallas
+flash kernel in ``repro.kernels.flash_attention`` is the TPU hot path and
+is validated against :func:`attention_ref` (see kernels/ref.py).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    ``fraction < 1`` rotates only the first ``fraction*hd`` dims (ChatGLM's
+    2d/partial RoPE: half the head dim carries positional signal).
+    """
+    hd = x.shape[-1]
+    inv, rot = rope_frequencies(hd, theta, fraction)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv      # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(x[..., :rot].shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# core attention math (reference; chunked over queries for memory)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """(Sq, Sk) additive bias."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+                  window: int | None = None,
+                  q_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B, Sq, H, hd), k/v: (B, Sk, K, hd) with H % K == 0.
+    Chunked over Sq so the (Sq, Sk) score tensor never fully materializes.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, Sq, K, g, hd)
+
+    def chunk_fn(qc, qp):
+        # qc: (B, C, K, g, hd)
+        s = jnp.einsum("bckgh,bskh->bckgs", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        bias = _mask_bias(qp, k_pos, causal, window)          # (C, Sk)
+        s = s + bias[None, :, None, None, :]
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bckgs,bskh->bckgh", p, v.astype(jnp.float32))
+
+    if Sq <= q_chunk:
+        out = chunk_fn(qh, q_pos)
+    else:
+        n = Sq // q_chunk
+        qs = qh.reshape(B, n, q_chunk, K, g, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(n, q_chunk)
+        out = jax.lax.map(lambda args: chunk_fn(*args), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, g, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], D, H * hd, dtype),
+         "wk": dense_init(ks[1], D, K * hd, dtype),
+         "wv": dense_init(ks[2], D, K * hd, dtype),
+         "wo": dense_init(ks[3], H * hd, D, dtype, scale=1.0 / math.sqrt(H * hd))}
+    if cfg.qkv_bias:
+        p["wq_bias"] = jnp.zeros((H * hd,), dtype)
+        p["wk_bias"] = jnp.zeros((K * hd,), dtype)
+        p["wv_bias"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, K, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray   # (B,) current fill
+
+
+def _project_qkv(p, x, ctx, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = ctx @ p["wk"]
+    v = ctx @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["wq_bias"]
+        k = k + p["wk_bias"]
+        v = v + p["wv_bias"]
+    return (q.reshape(B, S, H, hd),
+            k.reshape(B, ctx.shape[1], K, hd),
+            v.reshape(B, ctx.shape[1], K, hd))
+
+
+def attention_block(p: dict, x: jnp.ndarray, *, cfg: ModelConfig,
+                    positions: jnp.ndarray, q_chunk: int = 1024,
+                    shard=None) -> jnp.ndarray:
+    """Full-sequence self-attention (train / prefill)."""
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if shard is not None and x.shape[1] > 1:
+        # K/V must be full-sequence inside each q-chunk: gather them ONCE
+        # per layer (bf16) instead of letting each chunk's score einsum
+        # contract a model-sharded S and all-reduce f32 partials
+        # (§Perf mixtral iteration 6).
+        k = shard.constrain(k, (shard.dp, None, None, None))
+        v = shard.constrain(v, (shard.dp, None, None, None))
+    if cfg.rope_style != "none":
+        frac = cfg.rope_fraction if cfg.rope_style == "partial" else 1.0
+        q = apply_rope(q, positions, cfg.rope_theta, frac)
+        k = apply_rope(k, positions, cfg.rope_theta, frac)
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    if cfg.use_flash_kernel:
+        from ..kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=cfg.causal,
+            window=cfg.sliding_window).transpose(0, 2, 1, 3)
+    else:
+        out = gqa_attention(q, k, v, q_pos=pos1d, k_pos=pos1d,
+                            causal=cfg.causal, window=cfg.sliding_window,
+                            q_chunk=q_chunk)
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+
+
+def attention_prefill(p: dict, x: jnp.ndarray, *, cfg: ModelConfig,
+                      positions: jnp.ndarray, max_len: int,
+                      q_chunk: int = 1024, shard=None
+                      ) -> tuple[jnp.ndarray, KVCache]:
+    """Full-sequence attention that ALSO builds the decode cache in one
+    pass (vs replaying tokens through attention_decode).  For SWA the
+    cache is the ring-ordered last ``window`` keys/values, bit-identical
+    to what token-by-token decode would have produced."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if cfg.rope_style != "none":
+        frac = cfg.rope_fraction if cfg.rope_style == "partial" else 1.0
+        q = apply_rope(q, positions, cfg.rope_theta, frac)
+        k = apply_rope(k, positions, cfg.rope_theta, frac)
+    pos1d = positions if positions.ndim == 1 else positions[0]
+    out = gqa_attention(q, k, v, q_pos=pos1d, k_pos=pos1d, causal=cfg.causal,
+                        window=cfg.sliding_window, q_chunk=q_chunk)
+    out = out.reshape(B, S, -1) @ p["wo"]
+
+    S_max = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if cfg.sliding_window and S >= S_max:
+        tail_k = k[:, -S_max:]
+        tail_v = v[:, -S_max:]
+        perm = (jnp.arange(S_max) - S) % S_max      # slot -> tail index
+        k_cache = tail_k[:, perm]
+        v_cache = tail_v[:, perm]
+    else:
+        pad = S_max - min(S, S_max)
+        k_cache = jnp.pad(k[:, :S_max], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v[:, :S_max], ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = KVCache(k_cache.astype(k.dtype), v_cache.astype(v.dtype),
+                    jnp.full((B,), S, jnp.int32))
+    return out, cache
+
+
+def cross_attention_block(p: dict, x: jnp.ndarray, vision: jnp.ndarray, *,
+                          cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-attention onto frontend (vision) embeddings — no RoPE, no
+    causality over the context (llama-3.2-vision style)."""
+    q, k, v = _project_qkv(p, x, vision, cfg)
+    Sq, Sk = x.shape[1], vision.shape[1]
+    out = gqa_attention(q, k, v, q_pos=jnp.arange(Sq), k_pos=jnp.arange(Sk),
+                        causal=False, window=None, q_chunk=4096)
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"]
+
+
+def attention_decode(p: dict, x: jnp.ndarray, cache: KVCache, *,
+                     cfg: ModelConfig) -> tuple[jnp.ndarray, KVCache]:
+    """One-token decode: x (B, 1, D) against a (possibly windowed) cache."""
+    B = x.shape[0]
+    pos = cache.length                                    # (B,)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    if cfg.rope_style != "none":
+        frac = cfg.rope_fraction if cfg.rope_style == "partial" else 1.0
+        q = apply_rope(q, pos[:, None], cfg.rope_theta, frac)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta, frac)
+
+    S_max = cache.k.shape[1]
+    slot = (pos % S_max)                                  # ring buffer (SWA)
+    # One-hot (elementwise) ring update instead of a batched scatter:
+    # GSPMD cannot prove scatter indices align with the batch-sharded
+    # cache and replicates it — a 64 GiB f32 all-gather of the whole
+    # stacked cache per decode step (§Perf llama3xdecode iteration 2).
+    idx = jnp.arange(S_max)[None, :]
+    sel = (idx == slot[:, None])[:, :, None, None]        # (B,S,1,1)
+    k_cache = jnp.where(sel, k_new[:, 0][:, None], cache.k)
+    v_cache = jnp.where(sel, v_new[:, 0][:, None], cache.v)
+
+    # positions of cache slots (ring-aware): slot i holds absolute position
+    # pos - ((slot - i) mod S_max)
+    abs_pos = pos[:, None] - ((slot[:, None] - idx) % S_max)
+    valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if cfg.sliding_window is not None:
+        valid &= abs_pos > (pos[:, None] - cfg.sliding_window)
+
+    K, hd = cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // K
+    qh = q.reshape(B, K, g, hd)
+    # bf16 operands, f32 accumulation — avoids materializing an f32 cache.
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", pr.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"]
+    return out, KVCache(k_cache, v_cache, cache.length + 1)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    return KVCache(
+        k=jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), dtype),
+        v=jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), dtype),
+        length=jnp.full((batch,), seq_len, jnp.int32))

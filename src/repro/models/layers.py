@@ -1,0 +1,96 @@
+"""Primitive layers + name-based sharding rules.
+
+Params are nested dicts of jnp arrays.  Sharding specs are derived from
+parameter *paths* by :func:`partition_rules` (t5x-style), so init code
+stays sharding-agnostic and the launcher owns the distribution policy.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# partitioning rules
+# ---------------------------------------------------------------------------
+
+# Matched against '/'-joined param paths, first hit wins.  The trailing
+# dims of the spec align with the trailing dims of the array (leading
+# stacked-layer axes get None automatically).
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",               ("model", None)),       # (V, D) vocab-sharded
+    (r"lm_head$",             (None, "model")),       # (D, V)
+    (r"in_proj$",             (None, None)),          # audio input proj
+    (r"(wq|wk|wv)$",          (None, "model")),       # (D, H*hd) head-sharded
+    (r"(wq|wk|wv)_bias$",     ("model",)),
+    (r"wo$",                  ("model", None)),        # (H*hd, D)
+    (r"router$",              (None, None)),           # (D, E) replicated
+    (r"experts/(w_gate|w_up)$",   ("expert_or_ff",)),  # resolved below
+    (r"experts/w_down$",          ("expert_or_ff_down",)),
+    (r"(w_gate|w_up)$",       (None, "model")),        # (D, F)
+    (r"w_down$",              ("model", None)),        # (F, D)
+    (r"(ssm_in|ssm_gate)$",   (None, "model")),        # (D, d_inner)
+    (r"ssm_out$",             ("model", None)),        # (d_inner, D)
+    (r"(ssm_dt|ssm_bc)$",     ("model", None)),        # (d_inner, ·)
+    (r"ssm_a$",               ("model", None)),        # (d_inner, state)
+    (r"ssm_conv$",            ("model", None)),        # (d_inner, k)
+    (r"(ssm_d|ssm_dt_bias)$", ("model",)),
+    (r"(gate_i|gate_f|gate_o)$", (None, None)),        # small gate projs
+    (r"slstm_(wx|wh)$",       (None, "model")),
+    (r"slstm_out$",           ("model", None)),
+    (r".*(norm|scale|bias)$", (None,)),
+]
+
+
+def partition_rules(path: str, ndim: int, *, expert_sharded: bool) -> P:
+    """Spec for one param.  ``expert_sharded``: experts >= model-axis size,
+    so the expert dim is sharded; otherwise shard each expert's d_ff."""
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            if spec == ("expert_or_ff",):          # (E, D, F)
+                spec = ("model", None, None) if expert_sharded else (None, None, "model")
+            elif spec == ("expert_or_ff_down",):   # (E, F, D)
+                spec = ("model", None, None) if expert_sharded else (None, "model", None)
+            pad = (None,) * (ndim - len(spec))
+            return P(*(pad + tuple(spec)))
+    return P(*((None,) * ndim))
+
+
+def tree_paths(tree: PyTree) -> PyTree:
+    """Pytree of '/'-joined key paths, same structure as ``tree``."""
+    def name(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+    return jax.tree_util.tree_map_with_path(lambda kp, _: name(kp), tree)
+
+
+def build_param_specs(params: PyTree, *, expert_sharded: bool) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: partition_rules(
+            "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp),
+            leaf.ndim, expert_sharded=expert_sharded),
+        params)

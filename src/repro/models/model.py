@@ -1,0 +1,357 @@
+"""Model assembly: pattern-based block stack, scanned over repetitions.
+
+Any assigned architecture is ``embed -> n_rep x pattern -> norm -> head``
+where ``pattern`` is a short tuple of block kinds (attn / xattn / mamba /
+mlstm / slstm), each followed by a dense-or-MoE FFN when d_ff > 0.
+Layer params are stacked over the repetition axis and the stack runs under
+``lax.scan`` (+ optional remat) to keep HLO size ~O(pattern) instead of
+O(n_layers) — essential for 48-72 layer dry-run compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardHints:
+    """Activation sharding constraints (None disables them)."""
+    dp: tuple[str, ...] = ("data",)     # batch axes
+    tp: str | None = "model"
+    residual: str = "dmodel"            # carry sharding: "dmodel" | "seq"
+                                        # ("seq" = Megatron-SP baseline,
+                                        #  kept for §Perf A/B)
+
+    def constrain(self, x, spec):
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except (ValueError, RuntimeError):
+            return x
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig, shard: ShardHints | None = None):
+        self.cfg = cfg
+        self.shard = shard
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> PyTree:
+        cfg, dtype = self.cfg, self.dtype
+        D = cfg.d_model
+        k_embed, k_head, k_layers = jax.random.split(key, 3)
+        params: dict = {}
+        if cfg.embed_inputs:
+            params["embed"] = (jax.random.normal(k_embed, (cfg.vocab, D),
+                                                 jnp.float32) * 0.02).astype(dtype)
+        else:
+            params["in_proj"] = dense_init(k_embed, D, D, dtype)
+            params["embed"] = (jax.random.normal(
+                jax.random.fold_in(k_embed, 1), (cfg.vocab, D),
+                jnp.float32) * 0.02).astype(dtype)   # output classes table
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, D, cfg.vocab, dtype)
+        params["final_norm"] = jnp.ones((D,), jnp.float32)
+
+        def one_rep(rep_key):
+            ks = jax.random.split(rep_key, len(cfg.pattern))
+            layers = {}
+            for pos, kind in enumerate(cfg.pattern):
+                kb, kf = jax.random.split(ks[pos])
+                blk: dict = {"pre_norm": jnp.ones((D,), jnp.float32)}
+                if kind == "attn":
+                    blk["attn"] = attn.init_attention(kb, cfg, dtype)
+                elif kind == "xattn":
+                    blk["attn"] = attn.init_attention(kb, cfg, dtype, cross=True)
+                    blk["xattn_gate"] = jnp.zeros((), jnp.float32)
+                elif kind == "mamba":
+                    blk["mamba"] = ssm.init_mamba(kb, cfg, dtype)
+                elif kind == "mlstm":
+                    blk["mlstm"] = ssm.init_mlstm(kb, cfg, dtype)
+                elif kind == "slstm":
+                    blk["slstm"] = ssm.init_slstm(kb, cfg, dtype)
+                else:
+                    raise ValueError(kind)
+                if cfg.d_ff > 0:
+                    blk["ffn_norm"] = jnp.ones((D,), jnp.float32)
+                    if cfg.ffn_is_moe(pos):
+                        blk["moe"] = moe_mod.init_moe(kf, cfg, dtype)
+                    else:
+                        blk["ffn"] = moe_mod.init_dense_ffn(kf, cfg, dtype)
+                layers[f"pos{pos}"] = blk
+            return layers
+
+        rep_keys = jax.random.split(k_layers, cfg.n_rep)
+        params["layers"] = jax.vmap(one_rep)(rep_keys)
+        return params
+
+    # ------------------------------------------------------------------
+    # block application (full sequence)
+    # ------------------------------------------------------------------
+    def _apply_block(self, blk: dict, kind: str, pos: int, x: jnp.ndarray,
+                     positions: jnp.ndarray, vision: jnp.ndarray | None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = rms_norm(x, blk["pre_norm"], cfg.norm_eps)
+        if kind == "attn":
+            y = attn.attention_block(blk["attn"], h, cfg=cfg,
+                                     positions=positions, shard=self.shard)
+        elif kind == "xattn":
+            y = attn.cross_attention_block(blk["attn"], h, vision, cfg=cfg)
+            y = y * jnp.tanh(blk["xattn_gate"]).astype(y.dtype)
+        elif kind == "mamba":
+            y = ssm.mamba_block(blk["mamba"], h, cfg)
+        elif kind == "mlstm":
+            y = ssm.mlstm_block(blk["mlstm"], h, cfg)
+        elif kind == "slstm":
+            y = ssm.slstm_block(blk["slstm"], h, cfg)
+        x = x + y
+        if cfg.d_ff > 0:
+            h = rms_norm(x, blk["ffn_norm"], cfg.norm_eps)
+            if "moe" in blk:
+                y, metrics = moe_mod.moe_ffn(blk["moe"], h, cfg,
+                                             shard=self.shard)
+                aux = aux + metrics.aux_loss
+            else:
+                y = moe_mod.dense_ffn(blk["ffn"], h)
+            x = x + y
+        if self.shard is not None:
+            # Residual stream sharded (batch x d_model) between blocks: the
+            # remat-saved scan carry shrinks by the model-axis size, and —
+            # unlike Megatron sequence-sharding, tried first — K/V and the
+            # MoE dispatch see full sequences natively, so neither the
+            # q-chunk backward nor the dispatch scatter produce partial-sum
+            # all-reduces over the model axis (§Perf mixtral iterations
+            # 6-7).  Decode (S == 1) falls back to batch-only sharding.
+            if x.shape[1] > 1:
+                spec = (self.shard.dp, None, self.shard.tp) \
+                    if self.shard.residual == "dmodel" \
+                    else (self.shard.dp, self.shard.tp, None)
+                x = self.shard.constrain(x, spec)
+            else:
+                x = self.shard.constrain(x, (self.shard.dp, None, None))
+        return x, aux
+
+    def _embed(self, params: PyTree, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            x = params["embed"][batch["tokens"]]
+        else:
+            x = batch["features"].astype(self.dtype) @ params["in_proj"]
+        return x
+
+    def _head(self, params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        logits = x @ w
+        if self.shard is not None:
+            spec = (self.shard.dp, None, self.shard.tp) if logits.ndim == 3 \
+                else (self.shard.dp, self.shard.tp)
+            logits = self.shard.constrain(logits, spec)
+        return logits
+
+    def forward(self, params: PyTree, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence forward.  Returns (logits, moe_aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        vision = batch.get("vision")
+        if vision is not None:
+            vision = vision.astype(self.dtype)
+
+        def rep_body(x, rep_params):
+            aux = jnp.zeros((), jnp.float32)
+            for pos, kind in enumerate(cfg.pattern):
+                x, a = self._apply_block(rep_params[f"pos{pos}"], kind, pos,
+                                         x, positions, vision)
+                aux = aux + a
+            return x, aux
+
+        body = jax.checkpoint(rep_body) if cfg.remat else rep_body
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        return self._head(params, x), jnp.sum(auxs)
+
+    # ------------------------------------------------------------------
+    # losses / train step
+    # ------------------------------------------------------------------
+    def loss(self, params: PyTree, batch: dict) -> tuple[jnp.ndarray, dict]:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        # CE written to stay vocab-sharded: logsumexp reduces the sharded V
+        # dim (psum), the label logit comes via a one-hot einsum (partial
+        # sums + psum) — no all-gather of (B,S,V).
+        lf = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+        label_logit = jnp.einsum("...v,...v->...", lf, onehot)
+        nll = logz - label_logit
+        mask = batch.get("loss_mask")
+        if mask is None:
+            ce = jnp.mean(nll)
+        else:
+            ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + self.cfg.router_aux_weight * aux
+        return total, {"ce": ce, "moe_aux": aux}
+
+    # ------------------------------------------------------------------
+    # decode path
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, seq_len: int) -> PyTree:
+        """Cache pytree: per pattern position, stacked over reps."""
+        cfg = self.cfg
+
+        def one_rep(_):
+            caches = {}
+            for pos, kind in enumerate(cfg.pattern):
+                if kind == "attn":
+                    caches[f"pos{pos}"] = attn.init_kv_cache(cfg, batch, seq_len,
+                                                             self.dtype)
+                elif kind == "mamba":
+                    caches[f"pos{pos}"] = ssm.init_mamba_state(cfg, batch)
+                elif kind == "mlstm":
+                    caches[f"pos{pos}"] = ssm.init_mlstm_state(cfg, batch)
+                elif kind == "slstm":
+                    caches[f"pos{pos}"] = ssm.init_slstm_state(cfg, batch)
+                else:   # xattn: vision K/V recomputed per step
+                    caches[f"pos{pos}"] = jnp.zeros((batch,), jnp.int32)
+            return caches
+
+        return jax.vmap(one_rep)(jnp.arange(cfg.n_rep))
+
+    def prefill(self, params: PyTree, batch: dict, max_len: int
+                ) -> tuple[jnp.ndarray, PyTree]:
+        """One-pass prompt processing: full-sequence forward that ALSO
+        returns decode-ready caches (KV rings / recurrent states).
+        ``batch``: {"tokens": (B, S), ...}; ``max_len`` sizes the caches.
+        Returns (last-position logits (B, V), caches)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)
+        vision = batch.get("vision")
+        if vision is not None:
+            vision = vision.astype(self.dtype)
+
+        def rep_body(x, rep_params):
+            new_caches = {}
+            for pos, kind in enumerate(cfg.pattern):
+                blk = rep_params[f"pos{pos}"]
+                h = rms_norm(x, blk["pre_norm"], cfg.norm_eps)
+                if kind == "attn":
+                    y, cache = attn.attention_prefill(
+                        blk["attn"], h, cfg=cfg, positions=positions,
+                        max_len=max_len, shard=self.shard)
+                elif kind == "xattn":
+                    y = attn.cross_attention_block(blk["attn"], h, vision,
+                                                   cfg=cfg)
+                    y = y * jnp.tanh(blk["xattn_gate"]).astype(y.dtype)
+                    cache = jnp.zeros((B,), jnp.int32)
+                elif kind == "mamba":
+                    y, cache = ssm.mamba_block(blk["mamba"], h, cfg,
+                                               return_state=True)
+                elif kind == "mlstm":
+                    y, cache = ssm.mlstm_block(blk["mlstm"], h, cfg,
+                                               return_state=True)
+                elif kind == "slstm":
+                    y, cache = ssm.slstm_block(blk["slstm"], h, cfg,
+                                               return_state=True)
+                x = x + y
+                if cfg.d_ff > 0:
+                    h = rms_norm(x, blk["ffn_norm"], cfg.norm_eps)
+                    if "moe" in blk:
+                        y, _ = moe_mod.moe_ffn(blk["moe"], h, cfg,
+                                               shard=self.shard)
+                    else:
+                        y = moe_mod.dense_ffn(blk["ffn"], h)
+                    x = x + y
+                new_caches[f"pos{pos}"] = cache
+            return x, new_caches
+
+        x, caches = jax.lax.scan(rep_body, x, params["layers"])
+        logits = self._head(params, x[:, -1, :])
+        return logits, caches
+
+    def decode_step(self, params: PyTree, caches: PyTree, batch: dict
+                    ) -> tuple[jnp.ndarray, PyTree]:
+        """One-token decode. batch: {"token": (B,1) i32, ["vision"]}."""
+        cfg = self.cfg
+        x = params["embed"][batch["token"]] if cfg.embed_inputs else \
+            batch["features"].astype(self.dtype) @ params["in_proj"]
+        vision = batch.get("vision")
+        if vision is not None:
+            vision = vision.astype(self.dtype)
+
+        def rep_body(x, scanned):
+            rep_params, rep_caches = scanned
+            new_caches = {}
+            for pos, kind in enumerate(cfg.pattern):
+                blk = rep_params[f"pos{pos}"]
+                cache = rep_caches[f"pos{pos}"]
+                h = rms_norm(x, blk["pre_norm"], cfg.norm_eps)
+                if kind == "attn":
+                    y, cache = attn.attention_decode(blk["attn"], h, cache, cfg=cfg)
+                elif kind == "xattn":
+                    y = attn.cross_attention_block(blk["attn"], h, vision, cfg=cfg)
+                    y = y * jnp.tanh(blk["xattn_gate"]).astype(y.dtype)
+                elif kind == "mamba":
+                    y, cache = ssm.mamba_decode(blk["mamba"], h, cache, cfg)
+                elif kind == "mlstm":
+                    y, cache = ssm.mlstm_decode(blk["mlstm"], h, cache, cfg)
+                elif kind == "slstm":
+                    y, cache = ssm.slstm_decode(blk["slstm"], h, cache, cfg)
+                x = x + y
+                if cfg.d_ff > 0:
+                    h = rms_norm(x, blk["ffn_norm"], cfg.norm_eps)
+                    if "moe" in blk:
+                        y, _ = moe_mod.moe_ffn(blk["moe"], h, cfg)
+                    else:
+                        y = moe_mod.dense_ffn(blk["ffn"], h)
+                    x = x + y
+                new_caches[f"pos{pos}"] = cache
+            return x, new_caches
+
+        x, new_caches = jax.lax.scan(rep_body, x, (params["layers"], caches))
+        logits = self._head(params, x[:, -1, :])
+        return logits, new_caches
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    step: jnp.ndarray
+
+
+def make_train_step(model: Transformer, optimizer):
+    """Synchronous data/tensor-parallel train step (the 'centralized'
+    baseline in federated terms; the federated round wraps this)."""
+    def train_step(state: TrainState, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            state.params, batch)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt_state, state.step + 1), metrics
+    return train_step
+
+
+def make_serve_step(model: Transformer):
+    def serve_step(params: PyTree, caches: PyTree, batch: dict):
+        return model.decode_step(params, caches, batch)
+    return serve_step

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort-free dispatch.
+
+Dispatch is scatter/gather based (no (T, E, C) one-hot einsum, which would
+be O(T·E·C) memory): tokens are routed top-k, positions within each expert
+come from a cumulative count, overflow beyond capacity is dropped (standard
+Switch/GShard semantics).  The expert dimension is shardable over the
+``model`` mesh axis (expert parallelism, E >= axis) or the per-expert d_ff
+is sharded (tensor-parallel experts, E < axis) — chosen by the partition
+rules in :mod:`.layers`.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),   # fp32 router
+        "experts": {
+            "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * s_in).astype(dtype),
+            "w_up":   (jax.random.normal(ks[2], (E, D, F), jnp.float32) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32) * s_out).astype(dtype),
+        },
+    }
+
+
+def init_dense_ffn(key, cfg: ModelConfig, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    return {"w_gate": dense_init(ks[0], D, F, dtype, s_in),
+            "w_up":   dense_init(ks[1], D, F, dtype, s_in),
+            "w_down": dense_init(ks[2], F, D, dtype, s_out)}
+
+
+def dense_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU."""
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jnp.ndarray
+    dropped_fraction: jnp.ndarray
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg: ModelConfig, shard=None
+            ) -> tuple[jnp.ndarray, MoEMetrics]:
+    """x: (B, S, D) -> (B, S, D).  GROUP-LOCAL dispatch (GShard-style).
+
+    Tokens are grouped by batch row; routing, capacity and the dispatch
+    scatter are all per-group, so every dispatch tensor keeps a leading
+    B dim that stays sharded over the data axes.  §Perf iterations 1-4
+    (EXPERIMENTS.md, mixtral x train_4k) showed that a FLAT (T*K -> E*C)
+    scatter leaves GSPMD no shardable token dim: it either all-reduces
+    activation-sized partials (8.8 TB/step/device) or fully materializes
+    the buffer (64 GB f32 all-gathers).  Group-locality is the fix, not
+    sharding annotations.
+
+    Expert weights are used through compute-time constraints that keep
+    contraction dims unsharded (column-parallel gate/up, row-parallel
+    down): the data-axis storage shards get FSDP-gathered per layer,
+    O(|W_layer|) << O(activations).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(B, S, D)
+    if shard is not None and S > 1:
+        # Tokens arrive sequence-sharded over the model axis (Megatron-SP
+        # residual).  Gather them BEFORE dispatch: one bf16 all-gather of
+        # (B,S,D) beats all-reducing the f32 (B,E*cap,D) scatter output
+        # over the model axis (§Perf mixtral iteration 6: 462 GiB -> ~45).
+        xf = shard.constrain(xf, (shard.dp, None, None))
+
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)           # renorm top-k
+
+    # ---- load-balance auxiliary loss (Switch) ----
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-group (per-row) capacity positions ----
+    cap = int(S * K / E * cfg.capacity_factor) + 1
+    if cap >= 128:
+        cap = -(-cap // 128) * 128
+    flat_expert = expert_idx.reshape(B, S * K)                 # token-major
+    flat_gate = gate_vals.reshape(B, S * K)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)   # (B, SK, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(pos_in_expert * onehot, axis=2)              # (B, SK)
+    keep = pos < cap
+    dest = flat_expert * cap + jnp.minimum(pos, cap - 1)       # (B, SK)
+
+    src = jnp.repeat(xf, K, axis=1)                            # (B, SK, D)
+    src = jnp.where(keep[..., None], src, 0)
+
+    def scatter_row(dest_b, src_b):
+        return jnp.zeros((E * cap, D), x.dtype).at[dest_b].add(src_b)
+
+    buf = jax.vmap(scatter_row)(dest, src)                     # (B, E*cap, D)
+    h = buf.reshape(B, E, cap, D)
+
+    w = p["experts"]
+    wg, wu, wd = w["w_gate"], w["w_up"], w["w_down"]
+    if shard is not None:
+        h = shard.constrain(h, (shard.dp, None, None, None))
+        # column-parallel gate/up, row-parallel down: contraction dims
+        # unsharded -> data-axis storage shards are FSDP-gathered.
+        wg = shard.constrain(wg, (None, None, shard.tp))
+        wu = shard.constrain(wu, (None, None, shard.tp))
+        wd = shard.constrain(wd, (None, shard.tp, None))
+    act = jax.nn.silu(jnp.einsum("becd,edf->becf", h, wg))
+    act = act * jnp.einsum("becd,edf->becf", h, wu)
+    out_buf = jnp.einsum("becf,efd->becd", act, wd).reshape(B, E * cap, D)
+
+    gathered = jnp.take_along_axis(out_buf, dest[..., None], axis=1)
+    gathered = gathered * (flat_gate * keep)[..., None].astype(x.dtype)
+    out = jnp.sum(gathered.reshape(B, S, K, D), axis=2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out, MoEMetrics(aux, dropped)

@@ -1,0 +1,371 @@
+"""Recurrent blocks: Mamba (jamba), mLSTM + sLSTM (xLSTM).
+
+TPU adaptation notes (DESIGN.md §3/§4):
+  * Mamba's selective scan is a diagonal linear recurrence — implemented as
+    a `lax.scan` over sequence with O(B·d_inner·state) carried state (no
+    (B,S,d_inner,state) materialization).
+  * mLSTM is a matrix-memory linear recurrence — implemented CHUNKWISE
+    (quadratic within a chunk, recurrent across chunks), the TPU-friendly
+    formulation (MXU matmuls instead of a length-S scalar scan).  A
+    per-step reference (`mlstm_scan_ref`) backs the property tests.
+  * sLSTM has a nonlinear (stabilized exponential-gating) recurrence that
+    cannot be parallelized over time — `lax.scan`, kept for fidelity.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    di = D * cfg.ssm_expand
+    st = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "ssm_in":   dense_init(ks[0], D, di, dtype),
+        "ssm_gate": dense_init(ks[1], D, di, dtype),
+        "ssm_conv": (jax.random.normal(ks[2], (di, cfg.ssm_conv), jnp.float32)
+                     / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "ssm_bc":   dense_init(ks[3], di, 2 * st, dtype),
+        "ssm_dt":   dense_init(ks[4], di, 1, jnp.float32),
+        "ssm_dt_bias": jnp.full((di,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "ssm_a":    jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32),
+                                     (di, 1))),
+        "ssm_d":    jnp.ones((di,), jnp.float32),
+        "ssm_out":  dense_init(ks[5], di, D, dtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """u: (B, S, di), w: (di, k) depthwise causal conv."""
+    k = w.shape[1]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1], :] * w[:, i][None, None, :]
+    return out
+
+
+def mamba_block(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D). Selective-scan over the sequence.
+    ``return_state``: also return the MambaState after the last token
+    (prefill path)."""
+    B, S, D = x.shape
+    st = cfg.ssm_state
+    u_pre = x @ p["ssm_in"]                                # (B,S,di)
+    z = x @ p["ssm_gate"]
+    u = jax.nn.silu(_causal_conv(u_pre, p["ssm_conv"]))
+    uf = u.astype(jnp.float32)
+    dt = jax.nn.softplus(uf * p["ssm_dt"][:, 0][None, None, :]
+                         + p["ssm_dt_bias"][None, None, :])  # (B,S,di)
+    bc = uf @ p["ssm_bc"].astype(jnp.float32)              # (B,S,2st)
+    Bm, Cm = bc[..., :st], bc[..., st:]
+    A = -jnp.exp(p["ssm_a"])                               # (di, st)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                          # (B,di),(B,di),(B,st),(B,st)
+        decay = jnp.exp(dt_t[..., None] * A[None])         # (B,di,st)
+        h = decay * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)          # (B,di)
+        return h, y
+
+    h0 = jnp.zeros((B, u.shape[-1], st), jnp.float32)
+    xs = (uf.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + uf * p["ssm_d"][None, None, :]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["ssm_out"]
+    if return_state:
+        k = cfg.ssm_conv
+        tail = u_pre[:, -(k - 1):, :].astype(jnp.bfloat16) if S >= k - 1 else \
+            jnp.pad(u_pre, ((0, 0), (k - 1 - S, 0), (0, 0))).astype(jnp.bfloat16)
+        return out, MambaState(h_last, tail)
+    return out
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray          # (B, di, st) fp32
+    conv_buf: jnp.ndarray   # (B, k-1, di) last inputs
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    di = cfg.d_model * cfg.ssm_expand
+    return MambaState(jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+                      jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.bfloat16))
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, state: MambaState,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, MambaState]:
+    """x: (B, 1, D) one-token step."""
+    B = x.shape[0]
+    st = cfg.ssm_state
+    u = (x @ p["ssm_in"])[:, 0]                            # (B,di)
+    z = (x @ p["ssm_gate"])[:, 0]
+    window = jnp.concatenate([state.conv_buf,
+                              u[:, None, :].astype(state.conv_buf.dtype)], 1)
+    w = p["ssm_conv"]                                      # (di,k)
+    conv = jnp.sum(window.astype(jnp.float32)
+                   * w.T[None].astype(jnp.float32), axis=1)  # (B,di)
+    uf = jax.nn.silu(conv)
+    dt = jax.nn.softplus(uf * p["ssm_dt"][:, 0][None] + p["ssm_dt_bias"][None])
+    bc = uf @ p["ssm_bc"].astype(jnp.float32)
+    b_t, c_t = bc[:, :st], bc[:, st:]
+    A = -jnp.exp(p["ssm_a"])
+    decay = jnp.exp(dt[..., None] * A[None])
+    h = decay * state.h + (dt * uf)[..., None] * b_t[:, None, :]
+    y = jnp.sum(h * c_t[:, None, :], axis=-1) + uf * p["ssm_d"][None]
+    out = (y.astype(x.dtype) * jax.nn.silu(z))[:, None, :] @ p["ssm_out"]
+    return out, MambaState(h, window[:, 1:])
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell)
+# ===========================================================================
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    di = D * cfg.ssm_expand
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], D, di, dtype),
+        "wk": dense_init(ks[1], D, di, dtype),
+        "wv": dense_init(ks[2], D, di, dtype),
+        "gate_i": dense_init(ks[3], D, H, jnp.float32, 0.01),
+        "gate_f": dense_init(ks[4], D, H, jnp.float32, 0.01),
+        "gate_o": dense_init(ks[5], D, H, jnp.float32, 0.01),
+        "wo": dense_init(ks[6], di, D, dtype),
+    }
+
+
+def _mlstm_inputs(p, x, cfg):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = D * cfg.ssm_expand
+    hd = di // H
+    q = (x @ p["wq"]).reshape(B, S, H, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(xf @ p["gate_f"])           # (B,S,H)
+    log_i = xf @ p["gate_i"]                               # pre-exp input gate
+    o = jax.nn.sigmoid(xf @ p["gate_o"])                   # (B,S,H)
+    return q, k, v, log_f, log_i, o
+
+
+def mlstm_scan_ref(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Per-step stabilized recurrence — the ORACLE for the chunkwise path."""
+    q, k, v, log_f, log_i, o = _mlstm_inputs(p, x, cfg)
+    B, S, H, hd = q.shape
+
+    def step(carry, inp):
+        C, n, m = carry                                   # (B,H,hd,hd),(B,H,hd),(B,H)
+        q_t, k_t, v_t, lf, li = inp
+        m_new = jnp.maximum(lf + m, li)                   # (B,H)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(li - m_new)
+        C = fg[..., None, None] * C + ig[..., None, None] * (
+            k_t[..., :, None] * v_t[..., None, :])        # outer kv^T
+        n = fg[..., None] * n + ig[..., None] * k_t
+        num = jnp.einsum("bhde,bhd->bhe", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q_t)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.zeros((B, H), jnp.float32))
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_f.transpose(1, 0, 2),
+          log_i.transpose(1, 0, 2))
+    _, hs = jax.lax.scan(step, carry, xs)
+    h = hs.transpose(1, 0, 2, 3) * o[..., None]           # (B,S,H,hd)
+    return h.reshape(B, S, -1).astype(x.dtype) @ p["wo"]
+
+
+def mlstm_block(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                return_state: bool = False):
+    """Chunkwise-parallel mLSTM (production path)."""
+    q, k, v, log_f, log_i, o = _mlstm_inputs(p, x, cfg)
+    B, S, H, hd = q.shape
+    L = min(cfg.mlstm_chunk, S)
+    assert S % L == 0
+    nc = S // L
+
+    def to_chunks(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, *range(2, a.ndim + 1))
+
+    qc, kc, vc = map(to_chunks, (q, k, v))                # (nc,B,L,H,hd)
+    lfc, lic = map(to_chunks, (log_f, log_i))             # (nc,B,L,H)
+
+    def chunk(carry, inp):
+        C, n, m = carry                                   # (B,H,hd,hd),(B,H,hd),(B,H)
+        q_t, k_t, v_t, lf, li = inp                       # (B,L,...)
+        b = jnp.cumsum(lf, axis=1)                        # (B,L,H) cumulative decay
+        # stabilizers per position
+        intra_max = jnp.max(jnp.where(
+            jnp.tril(jnp.ones((L, L), bool))[None, :, :, None],
+            b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :],
+            -jnp.inf), axis=2)                            # (B,L,H)
+        m_pos = jnp.maximum(b + m[:, None, :], intra_max)
+        # inter-chunk term
+        inter_w = jnp.exp(b + m[:, None, :] - m_pos)      # (B,L,H)
+        num_inter = jnp.einsum("bhde,blhd->blhe", C, q_t) * inter_w[..., None]
+        den_inter = jnp.einsum("bhd,blhd->blh", n, q_t) * inter_w
+        # intra-chunk quadratic term
+        logw = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :] \
+            - m_pos[:, :, None, :]                        # (B,Lq,Lk,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        w = jnp.where(mask, jnp.exp(logw), 0.0)
+        scores = jnp.einsum("blhd,bshd->blsh", q_t, k_t) * w
+        num_intra = jnp.einsum("blsh,bshe->blhe", scores, v_t)
+        den_intra = jnp.sum(scores, axis=2)               # (B,L,H)
+        num = num_inter + num_intra
+        den = jnp.maximum(jnp.abs(den_inter + den_intra), jnp.exp(-m_pos))
+        h = num / den[..., None]                          # (B,L,H,hd)
+        # ---- state update to end of chunk ----
+        b_last = b[:, -1, :]                              # (B,H)
+        m_new = jnp.maximum(b_last + m, jnp.max(
+            b_last[:, None, :] - b + li, axis=1))
+        carry_w = jnp.exp(b_last + m - m_new)             # (B,H)
+        kv_w = jnp.exp(b_last[:, None, :] - b + li - m_new[:, None, :])  # (B,L,H)
+        C = carry_w[..., None, None] * C + jnp.einsum(
+            "blh,blhd,blhe->bhde", kv_w, k_t, v_t)
+        n = carry_w[..., None] * n + jnp.einsum("blh,blhd->bhd", kv_w, k_t)
+        return (C, n, m_new), h
+
+    carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.zeros((B, H), jnp.float32))
+    carry, hs = jax.lax.scan(chunk, carry, (qc, kc, vc, lfc, lic))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd) * o[..., None]
+    out = h.reshape(B, S, -1).astype(x.dtype) @ p["wo"]
+    if return_state:
+        return out, MLSTMState(*carry)
+    return out
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray
+    n: jnp.ndarray
+    m: jnp.ndarray
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H = cfg.n_heads
+    hd = cfg.d_model * cfg.ssm_expand // H
+    return MLSTMState(jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      jnp.zeros((batch, H, hd), jnp.float32),
+                      jnp.zeros((batch, H), jnp.float32))
+
+
+def mlstm_decode(p: dict, x: jnp.ndarray, state: MLSTMState,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, MLSTMState]:
+    q, k, v, log_f, log_i, o = _mlstm_inputs(p, x, cfg)   # S == 1
+    C, n, m = state
+    lf, li = log_f[:, 0], log_i[:, 0]
+    m_new = jnp.maximum(lf + m, li)
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(li - m_new)
+    C = fg[..., None, None] * C + ig[..., None, None] * (
+        k[:, 0, :, :, None] * v[:, 0, :, None, :])
+    n = fg[..., None] * n + ig[..., None] * k[:, 0]
+    num = jnp.einsum("bhde,bhd->bhe", C, q[:, 0])
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q[:, 0])),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]) * o[:, 0, :, None]
+    out = h.reshape(x.shape[0], 1, -1).astype(x.dtype) @ p["wo"]
+    return out, MLSTMState(C, n, m_new)
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory cell with recurrent head-local mixing)
+# ===========================================================================
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 2)
+    return {
+        "slstm_wx": dense_init(ks[0], D, 4 * D, dtype),
+        "slstm_r": (jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32)
+                    / math.sqrt(hd)).astype(jnp.float32),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jnp.ndarray   # (B, H, hd)
+    c: jnp.ndarray
+    n: jnp.ndarray
+    m: jnp.ndarray
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(z, z, z, z)
+
+
+def _slstm_step(state: SLSTMState, wx_t: jnp.ndarray, r: jnp.ndarray,
+                H: int, hd: int) -> tuple[SLSTMState, jnp.ndarray]:
+    """wx_t: (B, 4D) input preactivations."""
+    B = wx_t.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", state.h, r)          # (B,H,4hd)
+    pre = wx_t.reshape(B, H, 4 * hd) + rec
+    z, i, f, o = jnp.split(pre, 4, axis=-1)               # (B,H,hd) each
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(log_f + state.m, i)
+    ig = jnp.exp(i - m_new)
+    fg = jnp.exp(log_f + state.m - m_new)
+    c = fg * state.c + ig * z
+    n = jnp.maximum(fg * state.n + ig, jnp.exp(-m_new))
+    h = o * c / n
+    return SLSTMState(h, c, n, m_new), h
+
+
+def slstm_block(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                return_state: bool = False):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    wx = (x @ p["slstm_wx"]).astype(jnp.float32)          # (B,S,4D)
+
+    def step(st, wx_t):
+        st, h = _slstm_step(st, wx_t, p["slstm_r"], H, hd)
+        return st, h
+
+    # unroll=8: the recurrent-matrix gradient accumulates locally across
+    # unrolled steps, so the (replicated-carry-forced) cross-data
+    # all-reduce fires 8x less often — 8x fewer collective bytes
+    # (§Perf xlstm iteration 3).
+    st, hs = jax.lax.scan(step, init_slstm_state(cfg, B),
+                          wx.transpose(1, 0, 2), unroll=8 if S % 8 == 0 else 1)
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_decode(p: dict, x: jnp.ndarray, state: SLSTMState,
+                 cfg: ModelConfig) -> tuple[jnp.ndarray, SLSTMState]:
+    B, _, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    wx = (x[:, 0] @ p["slstm_wx"]).astype(jnp.float32)
+    state, h = _slstm_step(state, wx, p["slstm_r"], H, hd)
+    return h.reshape(B, 1, D).astype(x.dtype), state

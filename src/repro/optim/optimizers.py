@@ -1,0 +1,124 @@
+"""Minimal, dependency-free optimizer substrate (optax is not installed).
+
+An :class:`Optimizer` is an (init, update) pair over arbitrary pytrees.
+``adam`` supports bf16 moments for the ≥100B configs (memory note in
+DESIGN.md §4); all state is a pytree so it shards under pjit like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adam(lr: float | Schedule = 2e-4, b1: float = 0.5, b2: float = 0.9,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         moment_dtype: jnp.dtype | None = None,
+         max_grad_norm: float | None = None) -> Optimizer:
+    """Adam/AdamW.  CTGAN's defaults are lr=2e-4, betas=(0.5, 0.9).
+
+    ``moment_dtype=jnp.bfloat16`` halves optimizer memory for huge configs.
+    """
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        mdt = moment_dtype
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt or p.dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt or p.dtype), params)
+        return AdamState(mu, nu, jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step=None):
+        count = state.count + 1
+        lr_t = sched(count if step is None else step)
+        if max_grad_norm is not None:
+            grads = clip_by_global_norm(grads, max_grad_norm)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            c = count.astype(jnp.float32)
+            mhat = mf / (1 - b1 ** c)
+            vhat = vf / (1 - b2 ** c)
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * delta
+            return (newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamState(new_m, new_v, count)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Schedule = 1e-2, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum:
+            return (jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+        return (None, jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step=None):
+        buf, count = state
+        count = count + 1
+        lr_t = sched(count if step is None else step)
+        if momentum:
+            buf = jax.tree.map(lambda b, g: momentum * b + g.astype(b.dtype), buf, grads)
+            eff = buf
+        else:
+            eff = grads
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, eff)
+        return new_p, (buf, count)
+
+    return Optimizer(init, update)

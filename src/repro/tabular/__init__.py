@@ -1,0 +1,7 @@
+from .encoders import (ColumnSpec, LabelEncoder, SpanInfo, TableEncoders,
+                       fit_centralized_encoders)
+from .vgm import VGMParams, fit_vgm, sample_vgm, encode_column, decode_column
+from .datasets import (TabularDataset, make_dataset, partition_full_copy,
+                       partition_quantity_skew, partition_malicious,
+                       partition_label_skew)
+from .metrics import avg_jsd, avg_wd, similarity_report

@@ -1,0 +1,148 @@
+"""Column encoders and the full-table transformer for CTGAN-style models.
+
+A table schema is a list of :class:`ColumnSpec`.  Categorical columns use
+one-hot label encoders; continuous columns use the VGM mode-specific
+normalization from :mod:`repro.tabular.vgm`.  The encoded row layout is the
+CTGAN layout: for each continuous column ``[alpha, beta_1..beta_K]`` (tanh +
+softmax activations), for each categorical column ``[d_1..d_C]`` (softmax).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .vgm import VGMParams, encode_column, decode_column, fit_vgm
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSpec:
+    name: str
+    kind: str                      # "categorical" | "continuous"
+    n_categories: int = 0          # categorical only (global, post-union)
+    max_modes: int = 10            # continuous only
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanInfo:
+    """Activation span in the encoded row."""
+    start: int
+    width: int
+    activation: str                # "tanh" | "softmax"
+    column: int                    # index into schema
+    is_condition: bool             # eligible for the conditional vector
+
+
+@dataclasses.dataclass
+class LabelEncoder:
+    """Maps raw category ids -> global one-hot rank (Fed-TGAN §4.1).
+
+    Raw categories are represented as integer ids; the federator unions the
+    ids observed by all clients and assigns ranks by sorted order.  This is
+    exactly the paper's 'table which maps all possible distinct values ...
+    into their corresponding rank in one-hot encoding'.
+    """
+    categories: np.ndarray         # (C,) sorted raw ids
+
+    @property
+    def n(self) -> int:
+        return int(self.categories.shape[0])
+
+    def transform(self, raw: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.categories, raw)
+
+    def inverse(self, ranks: np.ndarray) -> np.ndarray:
+        return self.categories[np.clip(ranks, 0, self.n - 1)]
+
+
+@dataclasses.dataclass
+class TableEncoders:
+    """Global encoders for one table (one entry per column)."""
+    schema: list[ColumnSpec]
+    label_encoders: dict[int, LabelEncoder]    # by column index
+    vgms: dict[int, VGMParams]                 # by column index
+
+    # ---- encoded-layout helpers -------------------------------------
+    def spans(self) -> list[SpanInfo]:
+        out, pos = [], 0
+        for j, col in enumerate(self.schema):
+            if col.kind == "continuous":
+                out.append(SpanInfo(pos, 1, "tanh", j, False))
+                pos += 1
+                k = int(self.vgms[j].means.shape[0])
+                out.append(SpanInfo(pos, k, "softmax", j, True))
+                pos += k
+            else:
+                c = self.label_encoders[j].n
+                out.append(SpanInfo(pos, c, "softmax", j, True))
+                pos += c
+        return out
+
+    @property
+    def encoded_dim(self) -> int:
+        s = self.spans()
+        return s[-1].start + s[-1].width if s else 0
+
+    def condition_spans(self) -> list[SpanInfo]:
+        """Spans eligible for CTGAN's conditional vector (categorical
+        one-hots and continuous mode indicators)."""
+        return [s for s in self.spans() if s.is_condition]
+
+    @property
+    def cond_dim(self) -> int:
+        return sum(s.width for s in self.condition_spans())
+
+    # ---- transforms --------------------------------------------------
+    def encode(self, table: np.ndarray, key: jax.Array) -> jnp.ndarray:
+        """(N, Q) raw table -> (N, encoded_dim)."""
+        keys = jax.random.split(key, len(self.schema))
+        parts = []
+        for j, col in enumerate(self.schema):
+            x = jnp.asarray(table[:, j])
+            if col.kind == "continuous":
+                alpha, beta = encode_column(x, self.vgms[j], keys[j])
+                parts.append(alpha[:, None])
+                parts.append(beta)
+            else:
+                ranks = self.label_encoders[j].transform(np.asarray(table[:, j]))
+                parts.append(jax.nn.one_hot(jnp.asarray(ranks),
+                                            self.label_encoders[j].n))
+        return jnp.concatenate(parts, axis=1)
+
+    def decode(self, encoded: jnp.ndarray) -> np.ndarray:
+        """(N, encoded_dim) activations -> (N, Q) raw table."""
+        cols = []
+        spans = self.spans()
+        i = 0
+        for j, col in enumerate(self.schema):
+            if col.kind == "continuous":
+                alpha = encoded[:, spans[i].start:spans[i].start + 1][:, 0]
+                beta = encoded[:, spans[i + 1].start:
+                               spans[i + 1].start + spans[i + 1].width]
+                cols.append(np.asarray(decode_column(alpha, beta, self.vgms[j])))
+                i += 2
+            else:
+                sp = spans[i]
+                ranks = np.asarray(jnp.argmax(
+                    encoded[:, sp.start:sp.start + sp.width], axis=1))
+                cols.append(self.label_encoders[j].inverse(ranks))
+                i += 1
+        return np.stack(cols, axis=1)
+
+
+def fit_centralized_encoders(table: np.ndarray, schema: Sequence[ColumnSpec],
+                             key: jax.Array) -> TableEncoders:
+    """Non-federated reference: fit all encoders on pooled data (the
+    'Centralized' baseline and also the oracle for tests)."""
+    les, vgms = {}, {}
+    keys = jax.random.split(key, len(schema))
+    for j, col in enumerate(schema):
+        if col.kind == "categorical":
+            les[j] = LabelEncoder(np.unique(np.asarray(table[:, j])))
+        else:
+            vgms[j] = fit_vgm(jnp.asarray(table[:, j], jnp.float32), keys[j],
+                              max_modes=col.max_modes)
+    return TableEncoders(list(schema), les, vgms)

@@ -1,0 +1,52 @@
+"""Evaluation metrics of §5.2: Avg-JSD (categorical) and Avg-WD (continuous).
+
+Implemented on top of :mod:`repro.core.divergence` so the *same* JSD/WD code
+paths serve both the weighting scheme (§4.2) and the evaluation (§5.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import divergence as dv
+from .encoders import ColumnSpec
+
+
+def _category_freq(x: np.ndarray, n_cat: int) -> np.ndarray:
+    counts = np.bincount(x.astype(int), minlength=n_cat).astype(np.float64)
+    return counts / max(counts.sum(), 1.0)
+
+
+def avg_jsd(real: np.ndarray, synth: np.ndarray,
+            schema: list[ColumnSpec]) -> float:
+    """Average JSD over categorical columns (0 = identical)."""
+    vals = []
+    for j, col in enumerate(schema):
+        if col.kind != "categorical":
+            continue
+        n_cat = int(max(real[:, j].max(), synth[:, j].max())) + 1
+        p = _category_freq(real[:, j], n_cat)
+        q = _category_freq(synth[:, j], n_cat)
+        vals.append(float(dv.jsd(p, q)))
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def avg_wd(real: np.ndarray, synth: np.ndarray,
+           schema: list[ColumnSpec]) -> float:
+    """Average 1-D Wasserstein over continuous columns, min-max normalized
+    by the REAL column range (exactly §5.2's protocol)."""
+    vals = []
+    for j, col in enumerate(schema):
+        if col.kind != "continuous":
+            continue
+        lo, hi = real[:, j].min(), real[:, j].max()
+        scale = max(hi - lo, 1e-9)
+        r = (real[:, j] - lo) / scale
+        s = (synth[:, j] - lo) / scale
+        vals.append(float(dv.wasserstein_1d(r, s)))
+    return float(np.mean(vals)) if vals else 0.0
+
+
+def similarity_report(real: np.ndarray, synth: np.ndarray,
+                      schema: list[ColumnSpec]) -> dict[str, float]:
+    return {"avg_jsd": avg_jsd(real, synth, schema),
+            "avg_wd": avg_wd(real, synth, schema)}

@@ -1,0 +1,101 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models import attention as attn
+from repro.kernels import ref
+
+
+def _cfg(**kw):
+    base = dict(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab=64, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestGQA:
+    @pytest.mark.parametrize("H,K,causal,window",
+                             [(4, 2, True, None), (4, 4, False, None),
+                              (8, 2, True, 16), (4, 1, True, None)])
+    def test_matches_ref(self, key, H, K, causal, window):
+        B, S, hd = 2, 64, 16
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, K, hd))
+        v = jax.random.normal(ks[2], (B, S, K, hd))
+        out = attn.gqa_attention(q, k, v, q_pos=jnp.arange(S),
+                                 k_pos=jnp.arange(S), causal=causal,
+                                 window=window, q_chunk=16)
+        # ref expects (B,H,S,hd)
+        ref_out = ref.attention_ref(q.transpose(0, 2, 1, 3),
+                                    k.transpose(0, 2, 1, 3),
+                                    v.transpose(0, 2, 1, 3),
+                                    causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref_out.transpose(0, 2, 1, 3)),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestRoPE:
+    def test_norm_preserved(self, key):
+        x = jax.random.normal(key, (2, 8, 4, 32))
+        y = attn.apply_rope(x, jnp.arange(8), 10_000.0)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                                   np.linalg.norm(np.asarray(y), axis=-1),
+                                   rtol=1e-4)
+
+    def test_relative_property(self, key):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        q = jax.random.normal(key, (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+        def dot_at(m, n):
+            qr = attn.apply_rope(q, jnp.array([m]), 100.0)
+            kr = attn.apply_rope(k, jnp.array([n]), 100.0)
+            return float(jnp.sum(qr * kr))
+        assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-3
+
+    def test_partial_fraction_leaves_tail(self, key):
+        x = jax.random.normal(key, (1, 4, 2, 32))
+        y = attn.apply_rope(x, jnp.arange(4), 1e4, fraction=0.5)
+        np.testing.assert_allclose(np.asarray(x[..., 16:]),
+                                   np.asarray(y[..., 16:]))
+        assert not np.allclose(np.asarray(x[..., :16]), np.asarray(y[..., :16]))
+
+
+class TestDecodeCache:
+    def test_incremental_matches_full(self, key):
+        cfg = _cfg(rope_style="llama")
+        p = attn.init_attention(key, cfg, jnp.float32)
+        B, S = 2, 16
+        x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+        full = attn.attention_block(p, x, cfg=cfg, positions=jnp.arange(S))
+        cache = attn.init_kv_cache(cfg, B, S, jnp.float32)
+        cache = attn.KVCache(cache.k, cache.v, jnp.zeros((B,), jnp.int32))
+        outs = []
+        for t in range(S):
+            y, cache = attn.attention_decode(p, x[:, t:t+1], cache, cfg=cfg)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_sliding_window_ring_buffer(self, key):
+        cfg = _cfg(sliding_window=8, rope_style="llama")
+        p = attn.init_attention(key, cfg, jnp.float32)
+        B, S = 1, 24
+        x = jax.random.normal(jax.random.fold_in(key, 2), (B, S, cfg.d_model))
+        full = attn.attention_block(p, x, cfg=cfg, positions=jnp.arange(S))
+        cache = attn.init_kv_cache(cfg, B, S, jnp.float32)
+        assert cache.k.shape[1] == 8           # ring bounded by window
+        cache = attn.KVCache(cache.k, cache.v, jnp.zeros((B,), jnp.int32))
+        outs = []
+        for t in range(S):
+            y, cache = attn.attention_decode(p, x[:, t:t+1], cache, cfg=cfg)
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-3, atol=2e-3)

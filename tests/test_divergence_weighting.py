@@ -1,0 +1,91 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import divergence as dv
+from repro.core.weighting import (weights_from_divergence, uniform_weights,
+                                  quantity_only_weights)
+
+finite_probs = st.lists(st.floats(0.01, 1.0), min_size=2, max_size=12)
+
+
+class TestJSD:
+    def test_identical_zero(self):
+        p = jnp.array([0.2, 0.3, 0.5])
+        assert float(dv.jsd(p, p)) < 1e-6
+
+    def test_disjoint_is_one(self):
+        p = jnp.array([1.0, 0.0])
+        q = jnp.array([0.0, 1.0])
+        np.testing.assert_allclose(float(dv.jsd(p, q)), 1.0, atol=1e-5)
+
+    @settings(max_examples=50, deadline=None)
+    @given(finite_probs, finite_probs)
+    def test_bounds_and_symmetry(self, p, q):
+        n = min(len(p), len(q))
+        pa = jnp.asarray(p[:n])
+        qa = jnp.asarray(q[:n])
+        d1 = float(dv.jsd(pa, qa))
+        d2 = float(dv.jsd(qa, pa))
+        assert 0.0 <= d1 <= 1.0 + 1e-6
+        assert abs(d1 - d2) < 1e-5
+
+
+class TestWD:
+    def test_identical_zero(self, key):
+        x = jax.random.normal(key, (500,))
+        assert float(dv.wasserstein_1d(x, x)) < 1e-6
+
+    def test_shift_equals_distance(self, key):
+        x = jax.random.normal(key, (2000,))
+        d = float(dv.wasserstein_1d(x, x + 3.0))
+        assert abs(d - 3.0) < 0.05
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(-5, 5), st.floats(0.1, 3))
+    def test_nonnegative(self, mu, sd):
+        x = np.random.default_rng(0).normal(0, 1, 400)
+        y = np.random.default_rng(1).normal(mu, sd, 300)
+        assert float(dv.wasserstein_1d(x, y)) >= 0
+
+
+class TestWeighting:
+    def test_sums_to_one(self):
+        S = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (5, 7)))
+        w = weights_from_divergence(S, jnp.array([1., 2., 3., 4., 5.]))
+        np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-5)
+
+    def test_identical_clients_uniform(self):
+        S = jnp.ones((4, 6)) * 0.3
+        n = jnp.full((4,), 100.0)
+        w = weights_from_divergence(S, n)
+        np.testing.assert_allclose(np.asarray(w), 0.25, atol=1e-6)
+
+    def test_more_data_more_weight(self):
+        S = jnp.ones((3, 5)) * 0.2
+        w = weights_from_divergence(S, jnp.array([100., 100., 1000.]))
+        assert float(w[2]) > float(w[0])
+
+    def test_more_divergence_less_weight(self):
+        S = jnp.array([[0.1] * 4, [0.1] * 4, [0.9] * 4])
+        w = weights_from_divergence(S, jnp.full((3,), 100.0))
+        assert float(w[2]) < float(w[0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 8), st.integers(1, 10))
+    def test_permutation_equivariance(self, P, Q):
+        rng = np.random.default_rng(P * 10 + Q)
+        S = jnp.asarray(rng.uniform(0.01, 1, (P, Q)), jnp.float32)
+        n = jnp.asarray(rng.integers(10, 1000, P), jnp.float32)
+        w = np.asarray(weights_from_divergence(S, n))
+        perm = rng.permutation(P)
+        w2 = np.asarray(weights_from_divergence(S[perm], n[perm]))
+        np.testing.assert_allclose(w[perm], w2, rtol=1e-4, atol=1e-6)
+
+    def test_uniform_and_quantity_helpers(self):
+        np.testing.assert_allclose(np.asarray(uniform_weights(4)), 0.25)
+        wq = quantity_only_weights(jnp.array([1., 1., 8.]))
+        assert float(wq[2]) > float(wq[0])
+        np.testing.assert_allclose(float(jnp.sum(wq)), 1.0, rtol=1e-5)

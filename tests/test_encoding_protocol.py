@@ -1,0 +1,117 @@
+"""Fed-TGAN §4.1 privacy-preserving encoder initialization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoding import (compute_client_stats, federated_encoder_init,
+                                 client_vgm_dicts)
+from repro.core.weighting import fedtgan_weights, quantity_only_weights
+from repro.core.divergence import wasserstein_1d
+from repro.tabular import (make_dataset, partition_quantity_skew,
+                           partition_malicious, fit_centralized_encoders)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("adult", n_rows=3000, seed=0)
+    key = jax.random.PRNGKey(0)
+    parts = partition_quantity_skew(ds, 3, small_rows=400, seed=0)
+    stats = [compute_client_stats(p, ds.schema, jax.random.fold_in(key, i))
+             for i, p in enumerate(parts)]
+    init = federated_encoder_init(stats, ds.schema, key)
+    return ds, parts, stats, init, key
+
+
+def test_label_encoder_union(setup):
+    ds, parts, stats, init, _ = setup
+    for j, col in enumerate(ds.schema):
+        if col.kind != "categorical":
+            continue
+        le = init.encoders.label_encoders[j]
+        union = sorted({v for p in parts for v in np.unique(p[:, j])})
+        np.testing.assert_array_equal(le.categories, union)
+
+
+def test_row_counts_from_frequencies(setup):
+    _, parts, _, init, _ = setup
+    assert init.n_rows == [len(p) for p in parts]
+    assert init.n_total == sum(len(p) for p in parts)
+
+
+def test_global_frequencies_match_pooled(setup):
+    ds, parts, _, init, _ = setup
+    pooled = np.concatenate(parts)
+    for j, col in enumerate(ds.schema):
+        if col.kind != "categorical":
+            continue
+        le = init.encoders.label_encoders[j]
+        counts = np.bincount(le.transform(pooled[:, j]), minlength=le.n)
+        np.testing.assert_allclose(init.global_cat_freqs[j],
+                                   counts / counts.sum(), atol=1e-9)
+
+
+def test_global_vgm_close_to_centralized(setup):
+    ds, parts, _, init, key = setup
+    pooled = np.concatenate(parts)
+    cen = fit_centralized_encoders(pooled, ds.schema, key)
+    for j, col in enumerate(ds.schema):
+        if col.kind != "continuous":
+            continue
+        from repro.tabular.vgm import sample_vgm
+        s_fed = sample_vgm(init.encoders.vgms[j], key, 4000)
+        s_cen = sample_vgm(cen.vgms[j], jax.random.fold_in(key, 1), 4000)
+        scale = float(pooled[:, j].std()) + 1e-9
+        wd = float(wasserstein_1d(s_fed, s_cen)) / scale
+        assert wd < 0.5, (j, wd)
+
+
+def test_identical_model_structure_across_clients(setup):
+    """Clients encoding with the global encoders must agree on layout —
+    the whole point of §4.1."""
+    ds, parts, _, init, key = setup
+    dims = set()
+    for i, p in enumerate(parts):
+        enc = init.encoders.encode(p, jax.random.fold_in(key, 50 + i))
+        dims.add(enc.shape[1])
+        assert not bool(jnp.any(jnp.isnan(enc)))
+    assert len(dims) == 1
+    assert dims.pop() == init.encoders.encoded_dim
+
+
+def test_privacy_surface_is_stats_only():
+    """ClientStats must not contain raw rows (structural check)."""
+    ds = make_dataset("credit", n_rows=5000, seed=1)
+    s = compute_client_stats(ds.data, ds.schema, jax.random.PRNGKey(0))
+    # categorical: frequency dicts; continuous: VGM params of size max_modes
+    for j, vgm in s.vgms.items():
+        assert vgm.means.shape == (10,)
+    total_floats = sum(len(d) for d in s.cat_freqs.values()) + \
+        sum(v.means.size + v.stds.size + v.weights.size for v in s.vgms.values())
+    # payload is O(columns * modes), independent of row count
+    assert total_floats < 0.01 * ds.data.size
+    ds_big = make_dataset("credit", n_rows=50_000, seed=1)
+    s_big = compute_client_stats(ds_big.data[:, :3], ds_big.schema[:3],
+                                 jax.random.PRNGKey(0))
+    small = compute_client_stats(ds.data[:, :3], ds.schema[:3],
+                                 jax.random.PRNGKey(0))
+    n_small = sum(v.means.size for v in small.vgms.values())
+    n_big = sum(v.means.size for v in s_big.vgms.values())
+    assert n_small == n_big
+
+
+def test_malicious_client_downweighted_at_paper_proportions():
+    """§5.3.3: similarity weighting must give the repeated-row client LESS
+    weight than quantity-only weighting does."""
+    ds = make_dataset("adult", n_rows=4000, seed=0)
+    parts = partition_malicious(ds, 5, good_rows=1000, bad_rows=4000, seed=0)
+    key = jax.random.PRNGKey(0)
+    stats = [compute_client_stats(p, ds.schema, jax.random.fold_in(key, i))
+             for i, p in enumerate(parts)]
+    init = federated_encoder_init(stats, ds.schema, key)
+    w_fed = fedtgan_weights(ds.schema, init.client_cat_freqs,
+                            client_vgm_dicts(stats), init.encoders,
+                            init.global_cat_freqs,
+                            jnp.asarray(init.n_rows, jnp.float32), key)
+    w_qty = quantity_only_weights(jnp.asarray(init.n_rows, jnp.float32))
+    assert float(w_fed[-1]) < float(w_qty[-1])

@@ -1,0 +1,67 @@
+"""Federated-round features: FedProx wrap, partial participation, lens."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from typing import NamedTuple
+
+from repro.core.fedavg import (default_lens, default_merge, fedprox_wrap,
+                               make_federated_round, sample_client_weights)
+
+
+class St(NamedTuple):
+    params: jnp.ndarray
+    step: jnp.ndarray
+
+
+def sgd_step(state: St, batch):
+    grad = state.params - batch          # pull toward batch value
+    return St(state.params - 0.1 * grad, state.step + 1), {"g": grad}
+
+
+class TestFedProx:
+    def test_prox_pulls_toward_global(self, key):
+        st0 = St(jnp.ones((4,)) * 5.0, jnp.zeros((), jnp.int32))
+        glob = jnp.zeros((4,))
+        batch = jnp.ones((4,)) * 5.0      # grad == 0 -> pure prox effect
+        prox = fedprox_wrap(sgd_step, mu=0.5)
+        st1, _ = prox(st0, (batch, glob))
+        np.testing.assert_allclose(np.asarray(st1.params), 2.5)
+
+    def test_mu_zero_is_identity(self, key):
+        st0 = St(jax.random.normal(key, (4,)), jnp.zeros((), jnp.int32))
+        batch = jax.random.normal(jax.random.fold_in(key, 1), (4,))
+        plain, _ = sgd_step(st0, batch)
+        prox, _ = fedprox_wrap(sgd_step, mu=0.0)(st0, (batch, st0.params))
+        np.testing.assert_allclose(np.asarray(plain.params),
+                                   np.asarray(prox.params), rtol=1e-6)
+
+
+class TestClientSampling:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 16), st.floats(0.1, 1.0), st.integers(0, 100))
+    def test_valid_distribution(self, P, frac, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(jax.nn.softmax(jnp.asarray(rng.normal(size=P))))
+        out = sample_client_weights(w, jax.random.PRNGKey(seed), frac)
+        out = np.asarray(out)
+        assert abs(out.sum() - 1.0) < 1e-5
+        assert (out >= 0).all()
+        # dropped clients are exactly zero; survivors keep relative order
+        nz = out > 0
+        assert nz.any()
+
+    def test_full_participation_identity(self, key):
+        w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+        out = sample_client_weights(w, key, 1.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w), rtol=1e-6)
+
+
+class TestRoundLens:
+    def test_default_lens_roundtrip(self):
+        s = St(jnp.ones((3,)), jnp.zeros((), jnp.int32))
+        p = default_lens(s)
+        s2 = default_merge(s, p * 2)
+        np.testing.assert_allclose(np.asarray(s2.params), 2.0)
+        assert s2.step == s.step

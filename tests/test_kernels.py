@@ -1,0 +1,211 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk
+from repro.kernels.vgm_encode import vgm_encode
+from repro.kernels.weighted_agg import weighted_agg
+from repro.tabular.vgm import fit_vgm
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,Kh,Sq,Sk,hd", [
+        (1, 2, 2, 128, 128, 64),
+        (2, 4, 2, 256, 256, 32),
+        (1, 8, 1, 128, 256, 64),
+        (2, 3, 3, 192, 192, 16),        # padding path (192 % 128 != 0)
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, key, B, H, Kh, Sq, Sk, hd, causal):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Kh, Sk, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Kh, Sk, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("window", [32, 64, 100])
+    def test_sliding_window(self, key, window):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 256, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 256, 32), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        expect = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, key, dtype):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+        out = flash_attention(q, k, v, interpret=True)
+        expect = ref.attention_ref(q, k, v)
+        assert out.dtype == dtype
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("B,H,Kh,Sq,Sk,hd,causal,win", [
+        (1, 2, 2, 128, 128, 32, True, None),
+        (2, 4, 2, 128, 128, 16, True, None),     # GQA group-sum in bwd
+        (1, 2, 2, 256, 256, 32, True, 64),       # sliding window
+        (1, 2, 1, 192, 192, 16, False, None),    # padding + bidirectional
+    ])
+    def test_custom_vjp_matches_ref_grads(self, key, B, H, Kh, Sq, Sk, hd,
+                                          causal, win):
+        """The flash backward kernels (dq / dk / dv) against jax.grad of
+        the dense reference."""
+        ks = jax.random.split(key, 4)
+        q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Kh, Sk, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Kh, Sk, hd), jnp.float32)
+        ct = jax.random.normal(ks[3], (B, H, Sq, hd))
+
+        def loss_flash(q, k, v):
+            return jnp.sum(flash_attention(q, k, v, causal=causal,
+                                           window=win, interpret=True) * ct)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.attention_ref(q, k, v, causal=causal,
+                                             window=win) * ct)
+
+        g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+    def test_block_shape_invariance(self, key, bq, bk):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 2, 256, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 256, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 256, 32), jnp.float32)
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+        expect = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestVGMEncode:
+    @pytest.mark.parametrize("N,K", [(100, 10), (1000, 10), (555, 4), (2048, 16)])
+    def test_matches_ref(self, key, N, K):
+        x = jax.random.normal(key, (N,)) * 3.0
+        means = jnp.linspace(-3, 3, K)
+        stds = jnp.full((K,), 0.7)
+        logw = jnp.log(jnp.full((K,), 1.0 / K))
+        g = jax.random.gumbel(jax.random.fold_in(key, 1), (N, K))
+        a1, b1 = vgm_encode(x, means, stds, logw, g, block_n=256,
+                            interpret=True)
+        a2, b2 = ref.vgm_encode_ref(x, means, stds, logw, g)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+    def test_ops_wrapper_end_to_end(self, key):
+        x = jax.random.normal(key, (500,)) * 2 + 1
+        p = fit_vgm(x, key, max_modes=8)
+        a1, b1 = ops.vgm_encode(x, p, key, interpret=True)
+        a2, b2 = ops.vgm_encode(x, p, key, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+    def test_alpha_bounded(self, key):
+        x = jax.random.normal(key, (300,)) * 10
+        means = jnp.array([0.0])
+        stds = jnp.array([1.0])
+        logw = jnp.array([0.0])
+        g = jnp.zeros((300, 1))
+        a, _ = vgm_encode(x, means, stds, logw, g, block_n=128, interpret=True)
+        assert float(jnp.max(jnp.abs(a))) <= 1.0
+
+
+class TestMLSTMChunkKernel:
+    def _inputs(self, key, BH, S, hd):
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (BH, S, hd), jnp.float32) / np.sqrt(hd)
+        k = jax.random.normal(ks[1], (BH, S, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (BH, S, hd), jnp.float32)
+        lf = jax.nn.log_sigmoid(2.0 + jax.random.normal(ks[3], (BH, S)))
+        li = 0.5 * jax.random.normal(ks[4], (BH, S))
+        return q, k, v, lf, li
+
+    @pytest.mark.parametrize("BH,S,hd,chunk", [
+        (2, 64, 32, 16), (4, 128, 64, 32), (1, 256, 128, 128),
+        (3, 96, 16, 32),
+    ])
+    def test_matches_recurrence_oracle(self, key, BH, S, hd, chunk):
+        q, k, v, lf, li = self._inputs(key, BH, S, hd)
+        out = mlstm_chunk(q, k, v, lf, li, chunk=chunk, interpret=True)
+        expect = ref.mlstm_chunk_ref(q, k, v, lf, li)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-4)
+
+    def test_chunk_size_invariance(self, key):
+        q, k, v, lf, li = self._inputs(key, 2, 128, 32)
+        o1 = mlstm_chunk(q, k, v, lf, li, chunk=16, interpret=True)
+        o2 = mlstm_chunk(q, k, v, lf, li, chunk=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-3, atol=2e-4)
+
+    def test_strong_decay_forgets(self, key):
+        """With log_f ~ -inf the state resets: each step attends only to
+        itself -> output = v_t (normalized by |q.k| >= exp(-m))."""
+        q, k, v, lf, li = self._inputs(key, 1, 32, 16)
+        lf = jnp.full_like(lf, -30.0)
+        out = mlstm_chunk(q, k, v, lf, li, chunk=16, interpret=True)
+        expect = ref.mlstm_chunk_ref(q, k, v, lf, li)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-4)
+
+
+class TestWeightedAgg:
+    @pytest.mark.parametrize("P,D", [(2, 100), (5, 10_000), (16, 333),
+                                     (32, 65_536)])
+    def test_matches_ref(self, key, P, D):
+        s = jax.random.normal(key, (P, D), jnp.float32)
+        w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (P,)))
+        out = weighted_agg(s, w, block_d=4096, interpret=True)
+        expect = ref.weighted_agg_ref(s, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, key, dtype):
+        s = jax.random.normal(key, (4, 1000)).astype(dtype)
+        w = jnp.array([0.1, 0.2, 0.3, 0.4])
+        out = weighted_agg(s, w, block_d=512, interpret=True)
+        expect = ref.weighted_agg_ref(s, w)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_tree_wrapper_matches_core(self, key):
+        from repro.core.aggregation import weighted_average
+        tree = {"a": jax.random.normal(key, (3, 8, 16)),
+                "b": {"c": jax.random.normal(jax.random.fold_in(key, 1), (3, 5))}}
+        w = jnp.array([0.5, 0.3, 0.2])
+        t1 = ops.weighted_average_tree(tree, w, interpret=True)
+        t2 = weighted_average(tree, w)
+        for l1, l2 in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+            np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_unnormalized_weights(self, key):
+        s = jax.random.normal(key, (3, 256), jnp.float32)
+        w = jnp.array([1.0, 2.0, 3.0])       # not summing to 1
+        out = weighted_agg(s, w, block_d=256, interpret=True)
+        expect = ref.weighted_agg_ref(s, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5)

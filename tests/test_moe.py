@@ -1,0 +1,82 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models import moe as moe_mod
+
+
+def _cfg(**kw):
+    base = dict(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+                d_ff=64, vocab=64, n_experts=4, top_k=2,
+                capacity_factor=2.0, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_identical_experts_match_dense(key):
+    """With all experts holding the same weights and top-1 routing, MoE
+    output == dense FFN output (gates renormalize to 1)."""
+    cfg = _cfg(top_k=1, capacity_factor=8.0)
+    dense = moe_mod.init_dense_ffn(key, cfg, jnp.float32)
+    E = cfg.n_experts
+    p = {"router": jnp.zeros((cfg.d_model, E), jnp.float32),
+         "experts": {
+             "w_gate": jnp.tile(dense["w_gate"][None], (E, 1, 1)),
+             "w_up": jnp.tile(dense["w_up"][None], (E, 1, 1)),
+             "w_down": jnp.tile(dense["w_down"][None], (E, 1, 1))}}
+    x = jax.random.normal(key, (2, 8, cfg.d_model))
+    out, metrics = moe_mod.moe_ffn(p, x, cfg)
+    expect = moe_mod.dense_ffn(dense, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+    assert float(metrics.dropped_fraction) == 0.0
+
+
+def test_gates_renormalized_topk(key):
+    cfg = _cfg(top_k=2, capacity_factor=8.0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    out, metrics = moe_mod.moe_ffn(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(metrics.aux_loss) > 0
+
+
+def test_capacity_drops_overflow(key):
+    """Tiny capacity must drop tokens and report it."""
+    cfg = _cfg(top_k=1, capacity_factor=0.1)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg.d_model))
+    out, metrics = moe_mod.moe_ffn(p, x, cfg)
+    assert float(metrics.dropped_fraction) > 0
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_aux_loss_uniform_router_is_one(key):
+    """Switch aux loss == 1.0 for a perfectly uniform router."""
+    cfg = _cfg(top_k=1, capacity_factor=8.0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    p["router"] = jnp.zeros_like(p["router"])
+    x = jax.random.normal(key, (1, 64, cfg.d_model))
+    _, metrics = moe_mod.moe_ffn(p, x, cfg)
+    # uniform probs -> me = 1/E; argmax ties break to expert 0 -> ce is a
+    # point mass; aux = E * sum(me*ce) = E * (1/E) = 1
+    np.testing.assert_allclose(float(metrics.aux_loss), 1.0, rtol=1e-4)
+
+
+def test_moe_gradient_flows(key):
+    cfg = _cfg(top_k=2, capacity_factor=4.0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 16, cfg.d_model))
+
+    def loss(p):
+        out, _ = moe_mod.moe_ffn(p, x, cfg)
+        return jnp.sum(out ** 2)
+
+    g = jax.grad(loss)(p)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0

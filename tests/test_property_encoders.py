@@ -1,0 +1,70 @@
+"""Hypothesis property tests on the encoding system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import compute_client_stats, federated_encoder_init
+from repro.tabular.encoders import ColumnSpec, fit_centralized_encoders
+
+
+def _random_table(rng, n_rows, n_cat, n_cont):
+    cols, schema = [], []
+    for j in range(n_cat):
+        c = int(rng.integers(2, 8))
+        cols.append(rng.integers(0, c, n_rows).astype(np.float64))
+        schema.append(ColumnSpec(f"c{j}", "categorical"))
+    for j in range(n_cont):
+        cols.append(rng.normal(rng.uniform(-5, 5), rng.uniform(0.5, 3),
+                               n_rows))
+        schema.append(ColumnSpec(f"x{j}", "continuous"))
+    return np.stack(cols, 1), schema
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 10_000))
+def test_encode_layout_invariants(n_cat, n_cont, seed):
+    """For ANY schema: encoded width == sum of spans; softmax spans are
+    one-hot-ish (sum 1); alphas bounded; decode returns the right shape."""
+    rng = np.random.default_rng(seed)
+    table, schema = _random_table(rng, 300, n_cat, n_cont)
+    key = jax.random.PRNGKey(seed)
+    enc = fit_centralized_encoders(table, schema, key)
+    e = enc.encode(table, key)
+    assert e.shape == (300, enc.encoded_dim)
+    for s in enc.spans():
+        seg = e[:, s.start:s.start + s.width]
+        if s.activation == "softmax":
+            np.testing.assert_allclose(np.asarray(jnp.sum(seg, 1)), 1.0,
+                                       atol=1e-5)
+        else:
+            assert float(jnp.max(jnp.abs(seg))) <= 1.0 + 1e-6
+    dec = enc.decode(e)
+    assert dec.shape == table.shape
+    # categorical columns decode EXACTLY (one-hot roundtrip)
+    for j, col in enumerate(schema):
+        if col.kind == "categorical":
+            np.testing.assert_array_equal(dec[:, j], table[:, j])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 10_000))
+def test_federated_init_client_count_invariance(n_clients, seed):
+    """The GLOBAL label encoders depend only on the union of values, not
+    on how rows are split across clients."""
+    rng = np.random.default_rng(seed)
+    table, schema = _random_table(rng, 400, 2, 1)
+    key = jax.random.PRNGKey(seed)
+    splits = np.array_split(rng.permutation(400), n_clients)
+    stats = [compute_client_stats(table[ix], schema,
+                                  jax.random.fold_in(key, i))
+             for i, ix in enumerate(splits)]
+    init = federated_encoder_init(stats, schema, key)
+    cen = fit_centralized_encoders(table, schema, key)
+    for j, col in enumerate(schema):
+        if col.kind == "categorical":
+            np.testing.assert_array_equal(
+                init.encoders.label_encoders[j].categories,
+                cen.label_encoders[j].categories)
+    assert init.n_total == 400

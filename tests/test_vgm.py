@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.tabular.vgm import (fit_vgm, sample_vgm, encode_column,
+                               decode_column, merge_client_vgms)
+from repro.core.divergence import wasserstein_1d
+
+
+def _bimodal(key, n=4000):
+    k1, k2, k3 = jax.random.split(key, 3)
+    comp = jax.random.bernoulli(k1, 0.4, (n,))
+    return jnp.where(comp, 5.0 + 0.5 * jax.random.normal(k2, (n,)),
+                     -3.0 + 1.0 * jax.random.normal(k3, (n,)))
+
+
+def test_fit_recovers_modes(key):
+    x = _bimodal(key)
+    p = fit_vgm(x, key, max_modes=10)
+    means = np.asarray(p.means)[np.asarray(p.valid)]
+    w = np.asarray(p.weights)[np.asarray(p.valid)]
+    big = means[w > 0.08]
+    assert np.any(np.abs(big - 5.0) < 0.8), big
+    assert np.any(np.abs(big - (-3.0)) < 1.2), big
+
+
+def test_sample_matches_distribution(key):
+    x = _bimodal(key)
+    p = fit_vgm(x, key)
+    s = sample_vgm(p, jax.random.fold_in(key, 1), 4000)
+    assert float(wasserstein_1d(x, s)) < 0.35
+
+
+def test_encode_decode_roundtrip(key):
+    x = _bimodal(key, 1000)
+    p = fit_vgm(x, key)
+    alpha, beta = encode_column(x, p, key)
+    assert alpha.shape == (1000,) and beta.shape == (1000, 10)
+    assert float(jnp.max(jnp.abs(alpha))) <= 1.0
+    np.testing.assert_allclose(np.asarray(jnp.sum(beta, 1)), 1.0)
+    xr = decode_column(alpha, beta, p)
+    # most points reconstruct well (clipping can bite tails)
+    err = np.abs(np.asarray(xr - x))
+    assert np.quantile(err, 0.9) < 0.25, np.quantile(err, 0.9)
+
+
+def test_constant_column_safe(key):
+    x = jnp.full((500,), 3.14)
+    p = fit_vgm(x, key)
+    alpha, beta = encode_column(x, p, key)
+    assert np.isfinite(np.asarray(alpha)).all()
+    xr = decode_column(alpha, beta, p)
+    np.testing.assert_allclose(np.asarray(xr), 3.14, atol=0.05)
+
+
+def test_merge_client_vgms_close_to_pooled(key):
+    ks = jax.random.split(key, 4)
+    a = 2.0 + 0.7 * jax.random.normal(ks[0], (3000,))
+    b = -4.0 + 1.2 * jax.random.normal(ks[1], (3000,))
+    pooled = jnp.concatenate([a, b])
+    pa = fit_vgm(a, ks[0])
+    pb = fit_vgm(b, ks[1])
+    merged = merge_client_vgms([pa, pb], [3000, 3000], ks[2])
+    s_m = sample_vgm(merged, ks[3], 6000)
+    assert float(wasserstein_1d(pooled, s_m)) < 0.5
