@@ -1,0 +1,127 @@
+"""Fused table-wide encoding pipeline benchmarks.
+
+End-to-end table encode (per-column loop path vs fused ``EncodePlan``) and
+``presample_rounds`` throughput (per-row loop sampler vs the vectorized
+inverse-CDF sampler) on a 40k x 30 mixed table — the paper-scale client
+workload Fed-TGAN re-encodes round after round.  CPU wall times plus the
+roofline-PROJECTED TPU v5e time for the fused kernel (interpret mode
+measures Python/XLA, not silicon), same convention as kernel_bench.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.gan.sampler import ConditionalSampler
+from repro.kernels import ops
+from repro.launch.roofline import HBM_BW
+from repro.tabular import ColumnSpec, fit_centralized_encoders
+
+from .common import emit
+
+
+def _mixed_table(n_rows: int, n_cols: int, seed: int = 0):
+    """Half continuous (bimodal) / half categorical (zipf-ish) columns."""
+    rng = np.random.default_rng(seed)
+    cols, schema = [], []
+    for j in range(n_cols):
+        if j % 2 == 0:
+            mu = rng.uniform(-5, 5, 2)
+            pick = rng.random(n_rows) < 0.6
+            cols.append(np.where(pick, rng.normal(mu[0], 1.0, n_rows),
+                                 rng.normal(mu[1], 0.5, n_rows)))
+            schema.append(ColumnSpec(f"x{j}", "continuous"))
+        else:
+            c = int(rng.integers(3, 12))
+            p = 1.0 / np.arange(1, c + 1)
+            cols.append(rng.choice(c, n_rows, p=p / p.sum()).astype(np.float64))
+            schema.append(ColumnSpec(f"c{j}", "categorical"))
+    return np.stack(cols, axis=1), schema
+
+
+def _time(fn, iters: int = 3) -> float:
+    jax.block_until_ready(fn())                  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+        if out is not None:
+            jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_encode(N: int = 40_000, Q: int = 30) -> dict:
+    table, schema = _mixed_table(N, Q)
+    key = jax.random.PRNGKey(0)
+    enc = fit_centralized_encoders(table, schema, key)
+    q_cont = sum(c.kind == "continuous" for c in schema)
+    plan = enc.plan()
+
+    # interpret=True forces the Pallas kernel off-TPU (the default CPU
+    # route is the bit-identical jnp reference, timed below)
+    us_loop = _time(lambda: enc.encode_loop(table, key, interpret=True))
+    us_fused = _time(lambda: enc.encode(table, key, interpret=True))
+    us_loop_ref = _time(lambda: enc.encode_loop(table, key, use_pallas=False))
+    us_fused_ref = _time(lambda: enc.encode(table, key, use_pallas=False))
+
+    # kernel dispatches per encode (the structural win: Q_cont -> 1)
+    ops.DISPATCH_COUNTS.clear()
+    enc.encode(table, key, interpret=True)
+    fused_disp = ops.DISPATCH_COUNTS["vgm_encode_table"]
+    ops.DISPATCH_COUNTS.clear()
+    enc.encode_loop(table, key, interpret=True)
+    loop_disp = ops.DISPATCH_COUNTS["vgm_encode"]
+    ops.DISPATCH_COUNTS.clear()
+
+    # roofline projection for the fused kernel: x + gumbel in, slots out
+    K = plan.kmax
+    hbm = (N * q_cont * 4            # x columns
+           + N * q_cont * K * 4     # gumbel
+           + N * q_cont * (1 + K) * 4)  # alpha/beta slots
+    proj = hbm / HBM_BW * 1e6
+
+    emit(f"encode/loop_N{N}_Q{Q}", us_loop,
+         f"kernel_dispatches={loop_disp}")
+    emit(f"encode/fused_N{N}_Q{Q}", us_fused,
+         f"kernel_dispatches={fused_disp};speedup={us_loop / us_fused:.2f}x;"
+         f"tpu_roofline_us={proj:.1f}")
+    emit(f"encode/loop_ref_N{N}_Q{Q}", us_loop_ref, "backend=jnp")
+    emit(f"encode/fused_ref_N{N}_Q{Q}", us_fused_ref,
+         f"backend=jnp;speedup={us_loop_ref / us_fused_ref:.2f}x")
+    assert fused_disp == 1 and loop_disp == q_cont
+    return {"N": N, "Q": Q, "q_cont": q_cont,
+            "us_loop": us_loop, "us_fused": us_fused,
+            "us_loop_ref": us_loop_ref, "us_fused_ref": us_fused_ref,
+            "dispatches": {"loop": loop_disp, "fused": fused_disp},
+            "tpu_roofline_us": proj}
+
+
+def bench_presample(N: int = 40_000, Q: int = 30, rounds: int = 2,
+                    steps: int = 4, batch: int = 500) -> dict:
+    table, schema = _mixed_table(N, Q)
+    key = jax.random.PRNGKey(0)
+    enc = fit_centralized_encoders(table, schema, key)
+    encoded = np.asarray(enc.encode(table, key, use_pallas=False))
+    sampler = ConditionalSampler(encoded, enc, seed=0)
+
+    def presample_loop():
+        # the pre-vectorization path: one python-loop sample per step
+        outs = [sampler.sample_loop(batch) for _ in range(rounds * steps)]
+        return np.stack([o[0] for o in outs])
+
+    us_vec = _time(lambda: sampler.presample_rounds(rounds, steps, batch),
+                   iters=5)
+    us_loop = _time(presample_loop, iters=2)
+    speedup = us_loop / us_vec
+    total = rounds * steps * batch
+    emit(f"presample/loop_N{N}_B{total}", us_loop, "per_row_python=true")
+    emit(f"presample/vectorized_N{N}_B{total}", us_vec,
+         f"speedup={speedup:.1f}x;rows_per_s={total / (us_vec / 1e6):.0f}")
+    return {"N": N, "Q": Q, "draws": total, "us_loop": us_loop,
+            "us_vectorized": us_vec, "speedup": speedup}
+
+
+def run_all():
+    out = {"encode": bench_encode(), "presample": bench_presample()}
+    return out

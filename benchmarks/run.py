@@ -23,7 +23,7 @@ def main() -> None:
                     help="paper-scale settings (needs real hardware)")
     ap.add_argument("--only", default=None,
                     help="comma list: tab2,tab3,tab4,fig8a,fig8b,fig10a,"
-                         "fig10b,kernels,roofline")
+                         "fig10b,kernels,encode,roofline")
     args = ap.parse_args()
     sc = scale(args.full)
     want = set(args.only.split(",")) if args.only else None
@@ -31,7 +31,7 @@ def main() -> None:
     def on(name):
         return want is None or name in want
 
-    from . import kernel_bench, quality, roofline_table, timing
+    from . import encode_bench, kernel_bench, quality, roofline_table, timing
 
     print("name,us_per_call,derived")
     results = {}
@@ -51,6 +51,8 @@ def main() -> None:
         results["fig10b"] = timing.fig10b_row_scaling(sc)
     if on("kernels"):
         kernel_bench.run_all()
+    if on("encode"):
+        results["encode"] = encode_bench.run_all()
     if on("roofline"):
         roofline_table.run_all()
     save_json("results/bench_results.json", results)

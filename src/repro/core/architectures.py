@@ -19,8 +19,8 @@ import numpy as np
 
 from ..gan.ctgan import CTGANConfig
 from ..gan.sampler import ConditionalSampler
-from ..gan.trainer import (GANState, init_gan_state, make_train_steps,
-                           sample_synthetic)
+from ..gan.trainer import (GANState, init_gan_state, make_round_batches,
+                           make_train_steps, sample_synthetic)
 from ..tabular.encoders import ColumnSpec, TableEncoders, fit_centralized_encoders
 from ..tabular.metrics import similarity_report
 from . import comm_model
@@ -122,12 +122,9 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     key_eval = jax.random.PRNGKey(seed + 999)
     t0 = time.perf_counter()
     for r in range(rounds):
-        conds, masks, reals = zip(*[s.presample_rounds(1, local_steps,
-                                                       cfg.batch_size)
-                                    for s in samplers])
-        batches = (jnp.asarray(np.concatenate(conds)),
-                   jnp.asarray(np.concatenate(masks)),
-                   jnp.asarray(np.concatenate(reals)))
+        cond, mask, real = make_round_batches(samplers, 1, local_steps,
+                                              cfg.batch_size)
+        batches = (cond[:, 0], mask[:, 0], real[:, 0])
         states, metrics = one_round(states, batches)
         if eval_real is not None and ((r + 1) % eval_every == 0 or r == rounds - 1):
             g = jax.tree.map(lambda x: x[0], states.g_params)

@@ -5,6 +5,13 @@ Pre-indexes encoded rows by (condition span, category) so each step can
 (3) fetch a real row matching it — exactly CTGAN's procedure.  Produces
 numpy batches that the jitted train steps consume; the federated drivers
 pre-sample whole rounds so local steps can run inside ``lax.scan``.
+
+The hot path is fully vectorized: categories come from one inverse-CDF
+searchsorted over the per-span cumulative log-frequency table, matching
+rows from a CSR index (rows stably sorted by category per span), so a
+whole ``rounds x steps x batch`` pre-sample is a single numpy pass with no
+per-row Python.  ``sample_loop`` keeps the original per-row implementation
+as the distribution oracle.
 """
 from __future__ import annotations
 
@@ -21,25 +28,63 @@ class ConditionalSampler:
         self.cond_dim = sum(s.width for s in self.spans)
         self.n_spans = len(self.spans)
         self.rng = np.random.default_rng(seed)
+        N = self.encoded.shape[0]
 
-        # rows by (span, argmax category); log-frequency category probs
-        self.rows_by_cat: list[list[np.ndarray]] = []
+        # Per span: rows CSR-indexed by argmax category, log-frequency probs.
+        self._widths = np.array([s.width for s in self.spans], np.int64)
+        cmax = int(self._widths.max()) if self.n_spans else 0
+        self._counts = np.zeros((self.n_spans, cmax), np.int64)
+        self._starts = np.zeros((self.n_spans, cmax + 1), np.int64)
+        self._order = np.empty((self.n_spans, N), np.int64)
         self.cat_logfreq: list[np.ndarray] = []
-        for s in self.spans:
-            onehot = self.encoded[:, s.start:s.start + s.width]
-            cat = onehot.argmax(axis=1)
-            rows = [np.where(cat == c)[0] for c in range(s.width)]
-            freq = np.array([len(r) for r in rows], np.float64)
-            logf = np.log(freq + 1.0)
-            self.rows_by_cat.append(rows)
+        for si, s in enumerate(self.spans):
+            cat = self.encoded[:, s.start:s.start + s.width].argmax(axis=1)
+            self._counts[si, :s.width] = np.bincount(cat, minlength=s.width)
+            self._starts[si, 1:] = np.cumsum(self._counts[si])
+            self._order[si] = np.argsort(cat, kind="stable")
+            logf = np.log(self._counts[si, :s.width] + 1.0)
             self.cat_logfreq.append(logf / max(logf.sum(), 1e-12))
+        probs = np.zeros((self.n_spans, cmax), np.float64)
+        for si, p in enumerate(self.cat_logfreq):
+            probs[si, :len(p)] = p
+        self._cum = np.cumsum(probs, axis=1)
+        if self.n_spans:
+            self._cum[:, -1] = 1.0           # guard fp drift at the tail
+            self._fallback = self._counts.argmax(axis=1)
 
         self._span_offsets = np.cumsum([0] + [s.width for s in self.spans])
 
     def sample(self, batch: int):
         """Returns (cond, mask, real_rows):
           cond (B, cond_dim) float32, mask (B, n_spans) float32,
-          real (B, data_dim) float32 rows consistent with cond."""
+          real (B, data_dim) float32 rows consistent with cond.
+
+        One vectorized pass: uniform span pick, inverse-CDF category pick
+        from the log-frequency table, uniform row pick within the
+        (span, category) CSR bucket."""
+        span_ids = self.rng.integers(self.n_spans, size=batch)
+        u = self.rng.random(batch)
+        cum = self._cum[span_ids]                          # (B, Cmax)
+        c = (cum < u[:, None]).sum(axis=1)
+        c = np.minimum(c, self._widths[span_ids] - 1)
+        # guard empty category (possible on tiny client shards)
+        cnt = self._counts[span_ids, c]
+        c = np.where(cnt == 0, self._fallback[span_ids], c)
+        cnt = self._counts[span_ids, c]
+        pos = (self.rng.random(batch) * cnt).astype(np.int64)
+        pos = np.minimum(pos, np.maximum(cnt - 1, 0))
+        rows = self._order[span_ids, self._starts[span_ids, c] + pos]
+
+        b = np.arange(batch)
+        cond = np.zeros((batch, self.cond_dim), np.float32)
+        cond[b, self._span_offsets[span_ids] + c] = 1.0
+        mask = np.zeros((batch, self.n_spans), np.float32)
+        mask[b, span_ids] = 1.0
+        return cond, mask, self.encoded[rows]
+
+    def sample_loop(self, batch: int):
+        """Original per-row implementation — the distribution oracle for
+        :meth:`sample` and the benchmark baseline."""
         cond = np.zeros((batch, self.cond_dim), np.float32)
         mask = np.zeros((batch, self.n_spans), np.float32)
         rows = np.empty(batch, np.int64)
@@ -47,12 +92,12 @@ class ConditionalSampler:
         for i, si in enumerate(span_ids):
             probs = self.cat_logfreq[si]
             c = self.rng.choice(len(probs), p=probs)
-            # guard empty category (possible on tiny client shards)
-            cand = self.rows_by_cat[si][c]
-            if len(cand) == 0:
-                c = int(np.argmax([len(r) for r in self.rows_by_cat[si]]))
-                cand = self.rows_by_cat[si][c]
-            rows[i] = self.rng.choice(cand)
+            cnt = self._counts[si, c]
+            if cnt == 0:
+                c = int(self._fallback[si])
+                cnt = self._counts[si, c]
+            r = self.rng.integers(cnt)
+            rows[i] = self._order[si, self._starts[si, c] + r]
             cond[i, self._span_offsets[si] + c] = 1.0
             mask[i, si] = 1.0
         return cond, mask, self.encoded[rows]
@@ -62,12 +107,11 @@ class ConditionalSampler:
         return self.encoded[idx]
 
     def presample_rounds(self, rounds: int, steps_per_round: int, batch: int):
-        """(rounds, steps, ...) arrays for scan-based local training."""
-        conds, masks, reals = [], [], []
-        for _ in range(rounds * steps_per_round):
-            c, m, r = self.sample(batch)
-            conds.append(c); masks.append(m); reals.append(r)
-        def pack(xs):
-            a = np.stack(xs)
-            return a.reshape(rounds, steps_per_round, *a.shape[1:])
-        return pack(conds), pack(masks), pack(reals)
+        """(rounds, steps, ...) arrays for scan-based local training — all
+        ``rounds * steps * batch`` draws in ONE vectorized pass."""
+        total = rounds * steps_per_round * batch
+        cond, mask, real = self.sample(total)
+
+        def pack(a):
+            return a.reshape(rounds, steps_per_round, batch, *a.shape[1:])
+        return pack(cond), pack(mask), pack(real)

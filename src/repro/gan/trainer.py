@@ -13,6 +13,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..optim import adam
 from ..tabular.encoders import SpanInfo
@@ -86,6 +87,20 @@ def make_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         return new, {"d_loss": dl, "g_loss": gl, "wgan": wgan, "gp": gp, "ce": ce}
 
     return step
+
+
+def make_round_batches(samplers, rounds: int, steps_per_round: int,
+                       batch: int):
+    """Stage (cond, mask, real) batches for vmapped local scans.
+
+    Each client's sampler draws all ``rounds x steps x batch`` rows in one
+    vectorized pass (no per-row host loop); the per-client results stack
+    into ``(clients, rounds, steps, batch, ...)`` jnp arrays ready to be
+    indexed per round and fed to ``jax.vmap(local_train_scan)``."""
+    conds, masks, reals = zip(*[s.presample_rounds(rounds, steps_per_round,
+                                                   batch) for s in samplers])
+    return (jnp.asarray(np.stack(conds)), jnp.asarray(np.stack(masks)),
+            jnp.asarray(np.stack(reals)))
 
 
 def local_train_scan(step_fn, state: GANState, round_batches):

@@ -6,6 +6,8 @@ call site can be flipped for A/B testing.
 """
 from __future__ import annotations
 
+import collections
+
 import jax
 import jax.numpy as jnp
 
@@ -13,9 +15,15 @@ from . import ref
 from .flash_attention import flash_attention as _flash
 from .mlstm_chunk import mlstm_chunk as _mlstm_chunk
 from .vgm_encode import vgm_encode as _vgm_encode
+from .vgm_encode import vgm_encode_table as _vgm_encode_table
 from .weighted_agg import weighted_agg as _weighted_agg
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+# Host-level kernel dispatch counter (per wrapper call); benchmarks use it
+# to prove the fused encode path issues ONE dispatch where the per-column
+# loop issues Q_cont.  Reset with ``DISPATCH_COUNTS.clear()``.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,
@@ -27,19 +35,51 @@ def flash_attention(q, k, v, *, causal=True, window=None,
                   interpret=interp, **kw)
 
 
-def vgm_encode(x, params, key, *, use_pallas=True, interpret=None,
+def vgm_encode(x, params, key, *, use_pallas=None, interpret=None,
                block_n=1024):
     """Drop-in for tabular.vgm.encode_column: params is a VGMParams; the
-    Gumbel noise is drawn here so kernel and ref see identical randoms."""
+    Gumbel noise is drawn here so kernel and ref see identical randoms.
+
+    ``use_pallas=None`` auto-routes: the kernel on TPU (or whenever
+    ``interpret`` is requested explicitly), the jnp reference on CPU where
+    interpret-mode emulation is pure overhead.  Both are bit-identical."""
+    from ..tabular.vgm import kernel_log_weights
     K = params.means.shape[0]
-    logw = jnp.where(params.valid,
-                     jnp.log(jnp.maximum(params.weights, 1e-12)), -1e30)
+    logw = kernel_log_weights(params)
     gumbel = jax.random.gumbel(key, (x.shape[0], K), jnp.float32)
+    if use_pallas is None:
+        use_pallas = _ON_TPU or interpret is not None
     if not use_pallas:
+        DISPATCH_COUNTS["vgm_encode_ref"] += 1
         return ref.vgm_encode_ref(x, params.means, params.stds, logw, gumbel)
+    DISPATCH_COUNTS["vgm_encode"] += 1
     interp = (not _ON_TPU) if interpret is None else interpret
     return _vgm_encode(x, params.means, params.stds, logw, gumbel,
                        block_n=block_n, interpret=interp)
+
+
+def vgm_encode_table(x_cols, means, stds, log_weights, gumbel, *,
+                     use_pallas=None, interpret=None, block_n=None):
+    """Fused table-wide VGM encode: all continuous columns in ONE kernel
+    dispatch.  Packed ``(Q, Kmax)`` params (see tabular.vgm.pack_vgm_params)
+    and pre-drawn gumbel (N, Q*Kmax); returns slots (N, Q*(1+Kmax)).
+
+    ``use_pallas=None`` auto-routes like :func:`vgm_encode`.  ``block_n=None``
+    picks the row tile: 1024 on TPU (VMEM-sized VPU tiles); the whole table
+    in interpret mode, where per-grid-cell emulation overhead dominates and
+    one row block per column is fastest."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU or interpret is not None
+    if not use_pallas:
+        DISPATCH_COUNTS["vgm_encode_table_ref"] += 1
+        return ref.vgm_encode_table_ref(x_cols, means, stds, log_weights,
+                                        gumbel)
+    DISPATCH_COUNTS["vgm_encode_table"] += 1
+    interp = (not _ON_TPU) if interpret is None else interpret
+    if block_n is None:
+        block_n = max(int(x_cols.shape[0]), 1) if interp else 1024
+    return _vgm_encode_table(x_cols, means, stds, log_weights, gumbel,
+                             block_n=block_n, interpret=interp)
 
 
 def mlstm_chunk(q, k, v, log_f, log_i, *, use_pallas=True, interpret=None,

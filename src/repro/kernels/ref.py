@@ -55,6 +55,32 @@ def vgm_encode_ref(x: jnp.ndarray, means: jnp.ndarray, stds: jnp.ndarray,
     return alpha, beta
 
 
+def vgm_encode_table_ref(x_cols: jnp.ndarray, means: jnp.ndarray,
+                         stds: jnp.ndarray, log_weights: jnp.ndarray,
+                         gumbel: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused table-wide kernel.
+
+    x_cols: (N, Q); means/stds/log_weights: (Q, K) packed per-column params
+    (padded modes carry log_weights=-inf); gumbel: (N, Q*K).
+    Returns slots (N, Q*(1+K)): per column ``[alpha, beta_0..beta_{K-1}]``.
+    """
+    N, Q = x_cols.shape
+    K = means.shape[1]
+    g = gumbel.reshape(N, Q, K)
+    xf = x_cols.astype(jnp.float32)
+    z = (xf[:, :, None] - means[None]) / stds[None]
+    log_pdf = (-0.5 * z * z - jnp.log(stds)[None]
+               - 0.5 * math.log(2 * math.pi))
+    comp = jnp.argmax(log_pdf + log_weights[None] + g, axis=2)   # (N, Q)
+    cols = jnp.arange(Q)[None, :]
+    mu = means[cols, comp]
+    sd = stds[cols, comp]
+    alpha = jnp.clip((xf - mu) / (4.0 * sd), -1.0, 1.0)
+    beta = jax.nn.one_hot(comp, K, dtype=jnp.float32)            # (N, Q, K)
+    slots = jnp.concatenate([alpha[:, :, None], beta], axis=2)
+    return slots.reshape(N, Q * (1 + K))
+
+
 def mlstm_chunk_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     log_f: jnp.ndarray, log_i: jnp.ndarray) -> jnp.ndarray:
     """Per-step stabilized mLSTM recurrence (oracle for mlstm_chunk).

@@ -1,4 +1,4 @@
-"""VGM mode-specific normalization Pallas kernel.
+"""VGM mode-specific normalization Pallas kernels.
 
 The tabular-encoding hot loop of Fed-TGAN/CTGAN: for every cell of a
 continuous column, evaluate K Gaussian modes, Gumbel-sample a mode from the
@@ -6,8 +6,22 @@ responsibilities, and emit (alpha, one-hot beta).  On a 40k x 30-column
 table re-encoded every round this is the dominant client-side preprocessing
 cost; it is embarrassingly parallel over rows — ideal VPU work.
 
-Tiling: rows are tiled (block_n); the K mode parameters are broadcast into
-each tile (K is padded to the 128-lane multiple by ``ops.vgm_encode``).
+Two kernels live here:
+
+``vgm_encode``        — the original single-column kernel (one dispatch per
+                        continuous column; rows tiled by ``block_n``).
+``vgm_encode_table``  — the fused table-wide kernel: ALL continuous columns
+                        in ONE ``pallas_call``.  Per-column mode parameters
+                        are packed into ``(Q, Kmax)`` arrays (columns with
+                        fewer than Kmax modes carry ``-inf`` log-weights in
+                        the padding, so padded modes are never argmax'd) and
+                        the grid tiles ``(row_block, column)``.  Each grid
+                        cell writes its column's ``[alpha, beta_0..beta_K]``
+                        slot of the ``(N, Q*(1+Kmax))`` output, so the
+                        per-column ``jnp.concatenate`` of the loop path
+                        disappears — a single static gather (fused into the
+                        caller's jit) maps slots to the final CTGAN row
+                        layout.
 """
 from __future__ import annotations
 
@@ -18,27 +32,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_INF = -1e30
+from ..tabular.vgm import NEG_INF    # single source of the padding sentinel
+
 _LOG2PI = math.log(2.0 * math.pi)
 
 
-def _vgm_kernel(x_ref, means_ref, stds_ref, logw_ref, gumbel_ref,
-                alpha_ref, beta_ref):
-    x = x_ref[...].astype(jnp.float32)                  # (bn, 1)
-    means = means_ref[...].astype(jnp.float32)          # (1, K)
-    stds = stds_ref[...].astype(jnp.float32)
-    logw = logw_ref[...].astype(jnp.float32)
-    g = gumbel_ref[...].astype(jnp.float32)             # (bn, K)
-
+def _mode_normalize(x, means, stds, logw, g):
+    """Shared body of both kernels: Gumbel-argmax mode pick + mode-specific
+    normalization.  x (bn, 1); means/stds/logw (1, K); g (bn, K).  Returns
+    (alpha (bn,), onehot (bn, K)); all inputs pre-cast to f32."""
     z = (x - means) / stds
     logits = -0.5 * z * z - jnp.log(stds) - 0.5 * _LOG2PI + logw + g
     comp = jnp.argmax(logits, axis=1)                   # (bn,)
-    K = means.shape[1]
     onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
               == comp[:, None]).astype(jnp.float32)
     mu = jnp.sum(onehot * means, axis=1)
     sd = jnp.sum(onehot * stds, axis=1)
     alpha = jnp.clip((x[:, 0] - mu) / (4.0 * sd), -1.0, 1.0)
+    return alpha, onehot
+
+
+def _vgm_kernel(x_ref, means_ref, stds_ref, logw_ref, gumbel_ref,
+                alpha_ref, beta_ref):
+    alpha, onehot = _mode_normalize(
+        x_ref[...].astype(jnp.float32), means_ref[...].astype(jnp.float32),
+        stds_ref[...].astype(jnp.float32), logw_ref[...].astype(jnp.float32),
+        gumbel_ref[...].astype(jnp.float32))
     alpha_ref[...] = alpha[:, None]
     beta_ref[...] = onehot
 
@@ -79,3 +98,54 @@ def vgm_encode(x: jnp.ndarray, means: jnp.ndarray, stds: jnp.ndarray,
         interpret=interpret,
     )(x[:, None], means[None, :], stds[None, :], log_weights[None, :], gumbel)
     return alpha[:N, 0], beta[:N]
+
+
+def _vgm_table_kernel(x_ref, means_ref, stds_ref, logw_ref, gumbel_ref,
+                      out_ref):
+    alpha, onehot = _mode_normalize(
+        x_ref[...].astype(jnp.float32), means_ref[...].astype(jnp.float32),
+        stds_ref[...].astype(jnp.float32), logw_ref[...].astype(jnp.float32),
+        gumbel_ref[...].astype(jnp.float32))
+    out_ref[:, 0:1] = alpha[:, None]
+    out_ref[:, 1:] = onehot
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def vgm_encode_table(x_cols: jnp.ndarray, means: jnp.ndarray,
+                     stds: jnp.ndarray, log_weights: jnp.ndarray,
+                     gumbel: jnp.ndarray, *, block_n: int = 1024,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Fused multi-column VGM encode: ONE dispatch for the whole table.
+
+    x_cols: (N, Q) continuous columns; means/stds/log_weights: (Q, Kmax)
+    packed per-column mode params (pad unused modes with log_weights=-inf
+    and stds=1); gumbel: (N, Q*Kmax) laid out column-major-by-slot (column
+    q occupies lanes [q*Kmax, (q+1)*Kmax)).
+
+    Returns slots (N, Q*(1+Kmax)): column q's slot is
+    ``[alpha_q, beta_q_0 .. beta_q_{Kmax-1}]`` at offset ``q*(1+Kmax)``.
+    """
+    N, Q = x_cols.shape
+    K = means.shape[1]
+    S = 1 + K
+    pad_n = (-N) % block_n
+    if pad_n:
+        x_cols = jnp.pad(x_cols, ((0, pad_n), (0, 0)))
+        gumbel = jnp.pad(gumbel, ((0, pad_n), (0, 0)))
+    Np = N + pad_n
+
+    slots = pl.pallas_call(
+        _vgm_table_kernel,
+        grid=(Np // block_n, Q),
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, K), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, S), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Q * S), jnp.float32),
+        interpret=interpret,
+    )(x_cols, means, stds, log_weights, gumbel)
+    return slots[:N]

@@ -143,6 +143,11 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
     init = federated_encoder_init(stats, ds.schema, key, max_modes=MAX_MODES)
     enc = init.encoders
     spans, cond_spans = tuple(enc.spans()), tuple(enc.condition_spans())
+    # Encode a shard through the fused one-dispatch plan — the same path
+    # real clients run every round — and size the batch specs off it.
+    plan = enc.plan()
+    encoded = plan.encode(ds.data[:256], jax.random.fold_in(key, 99))
+    assert encoded.shape[1] == plan.encoded_dim == enc.encoded_dim
 
     state_shape = jax.eval_shape(
         lambda k: init_gan_state(k, GAN_CFG, enc.cond_dim, enc.encoded_dim),
@@ -152,12 +157,12 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
     st_sp = jax.tree.map(lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))),
                          st_sh)
     B = GAN_CFG.batch_size
-    batch = (jax.ShapeDtypeStruct((n_clients, local_steps, B, enc.cond_dim),
+    batch = (jax.ShapeDtypeStruct((n_clients, local_steps, B, plan.cond_dim),
                                   jnp.float32),
              jax.ShapeDtypeStruct((n_clients, local_steps, B,
                                    len(cond_spans)), jnp.float32),
              jax.ShapeDtypeStruct((n_clients, local_steps, B,
-                                   enc.encoded_dim), jnp.float32))
+                                   int(encoded.shape[1])), jnp.float32))
     bspecs = jax.tree.map(lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))),
                           batch)
     weights = jax.ShapeDtypeStruct((n_clients,), jnp.float32)

@@ -1,6 +1,8 @@
-from .encoders import (ColumnSpec, LabelEncoder, SpanInfo, TableEncoders,
-                       fit_centralized_encoders)
-from .vgm import VGMParams, fit_vgm, sample_vgm, encode_column, decode_column
+from .encoders import (ColumnSpec, EncodePlan, LabelEncoder, SpanInfo,
+                       TableEncoders, fit_centralized_encoders,
+                       make_encode_plan)
+from .vgm import (VGMParams, fit_vgm, sample_vgm, encode_column,
+                  decode_column, pack_vgm_params, kernel_log_weights)
 from .datasets import (TabularDataset, make_dataset, partition_full_copy,
                        partition_quantity_skew, partition_malicious,
                        partition_label_skew)

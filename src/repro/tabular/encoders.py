@@ -5,17 +5,30 @@ one-hot label encoders; continuous columns use the VGM mode-specific
 normalization from :mod:`repro.tabular.vgm`.  The encoded row layout is the
 CTGAN layout: for each continuous column ``[alpha, beta_1..beta_K]`` (tanh +
 softmax activations), for each categorical column ``[d_1..d_C]`` (softmax).
+
+Two encode paths exist:
+
+``TableEncoders.encode_loop``  — the original per-column path: one VGM
+    kernel dispatch per continuous column, a ``jax.nn.one_hot`` per
+    categorical, and a Q-way ``jnp.concatenate``.
+``TableEncoders.encode``       — the fused path via :class:`EncodePlan`:
+    ONE table-wide kernel dispatch for all continuous columns
+    (``kernels.ops.vgm_encode_table``), one vectorized rank/one-hot pass
+    for all categoricals, and a single static gather into the final row
+    layout.  Both paths draw per-column Gumbel noise from the same
+    ``jax.random.split(key, Q)`` streams, so they are bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from functools import partial
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .vgm import VGMParams, encode_column, decode_column, fit_vgm
+from .vgm import VGMParams, decode_column, fit_vgm, pack_vgm_params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,14 +109,41 @@ class TableEncoders:
         return sum(s.width for s in self.condition_spans())
 
     # ---- transforms --------------------------------------------------
-    def encode(self, table: np.ndarray, key: jax.Array) -> jnp.ndarray:
-        """(N, Q) raw table -> (N, encoded_dim)."""
+    def plan(self) -> "EncodePlan":
+        """The fused one-dispatch encode plan (built once, then cached)."""
+        p = getattr(self, "_plan", None)
+        if p is None:
+            p = make_encode_plan(self)
+            self._plan = p
+        return p
+
+    def encode(self, table: np.ndarray, key: jax.Array, *,
+               use_pallas: bool | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+        """(N, Q) raw table -> (N, encoded_dim), fused single-dispatch path.
+
+        ``use_pallas=None`` auto-routes the kernel backend (Pallas on TPU,
+        the bit-identical jnp reference on CPU)."""
+        return self.plan().encode(table, key, use_pallas=use_pallas,
+                                  interpret=interpret)
+
+    def encode_loop(self, table: np.ndarray, key: jax.Array, *,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+        """Per-column reference path (Q_cont kernel dispatches + concat).
+
+        Kept as the oracle for :meth:`encode` and as the benchmark baseline;
+        draws the same per-column Gumbel streams as the fused plan, so the
+        two are bit-identical."""
+        from ..kernels import ops
         keys = jax.random.split(key, len(self.schema))
         parts = []
         for j, col in enumerate(self.schema):
-            x = jnp.asarray(table[:, j])
             if col.kind == "continuous":
-                alpha, beta = encode_column(x, self.vgms[j], keys[j])
+                x = jnp.asarray(table[:, j], jnp.float32)
+                alpha, beta = ops.vgm_encode(x, self.vgms[j], keys[j],
+                                             use_pallas=use_pallas,
+                                             interpret=interpret)
                 parts.append(alpha[:, None])
                 parts.append(beta)
             else:
@@ -131,6 +171,139 @@ class TableEncoders:
                 cols.append(self.label_encoders[j].inverse(ranks))
                 i += 1
         return np.stack(cols, axis=1)
+
+
+@dataclasses.dataclass
+class EncodePlan:
+    """Precompiled table-wide encode: static packed mode params, span
+    offsets, and categorical gather tables derived once from a
+    :class:`TableEncoders` so every subsequent encode is
+
+        1 jitted Gumbel draw
+      + 1 fused ``vgm_encode_table`` kernel dispatch (ALL continuous cols)
+      + 1 jitted assemble (vectorized categorical ranks/one-hot + a single
+        static gather into the final CTGAN row layout)
+
+    instead of a Python loop with one kernel dispatch per column and a
+    Q-way concatenate."""
+    schema: list[ColumnSpec]
+    cont_cols: tuple[int, ...]         # schema indices, continuous
+    cat_cols: tuple[int, ...]          # schema indices, categorical
+    col_modes: tuple[int, ...]         # K_j per continuous column
+    kmax: int
+    encoded_dim: int
+    cond_dim: int
+    means: jnp.ndarray                 # (Q_cont, Kmax) packed
+    stds: jnp.ndarray                  # (Q_cont, Kmax)
+    logw: jnp.ndarray                  # (Q_cont, Kmax), -inf padding
+    _cat_ranks: Callable               # (table) -> (n, Q_cat) int32, host
+    _draw_gumbel: Callable             # (key, n) -> (n, Q_cont*Kmax)
+    _assemble: Callable                # (slots, ranks) -> (n, encoded_dim)
+
+    def encode(self, table: np.ndarray, key: jax.Array, *,
+               use_pallas: bool | None = None,
+               interpret: bool | None = None,
+               block_n: int | None = None) -> jnp.ndarray:
+        from ..kernels import ops
+        table = np.asarray(table)
+        n = table.shape[0]
+        # ranks in float64 on host — exactly LabelEncoder.transform's
+        # np.searchsorted (float32 would collapse category ids >= 2^24)
+        ranks = jnp.asarray(self._cat_ranks(table))
+        if self.cont_cols:
+            x = jnp.asarray(table[:, list(self.cont_cols)], jnp.float32)
+            g = self._draw_gumbel(key, n)
+            slots = ops.vgm_encode_table(x, self.means, self.stds, self.logw,
+                                         g, use_pallas=use_pallas,
+                                         interpret=interpret, block_n=block_n)
+        else:
+            slots = jnp.zeros((n, 0), jnp.float32)
+        return self._assemble(slots, ranks)
+
+
+def make_encode_plan(enc: TableEncoders) -> EncodePlan:
+    """Build the fused encode plan from fitted per-column encoders."""
+    schema = enc.schema
+    cont_cols = tuple(j for j, c in enumerate(schema) if c.kind == "continuous")
+    cat_cols = tuple(j for j, c in enumerate(schema) if c.kind == "categorical")
+    vgms = [enc.vgms[j] for j in cont_cols]
+    col_modes = tuple(int(p.means.shape[0]) for p in vgms)
+    kmax = max(col_modes, default=0)
+    slot = 1 + kmax                                  # [alpha, beta_0..beta_K)
+    if cont_cols:
+        means, stds, logw = pack_vgm_params(vgms, kmax)
+    else:
+        means = stds = logw = jnp.zeros((0, 0), jnp.float32)
+
+    cat_widths = [enc.label_encoders[j].n for j in cat_cols]
+    # one entry per categorical output position: (which cat column, rank)
+    pos_cat_col = np.concatenate(
+        [np.full(w, q, np.int32) for q, w in enumerate(cat_widths)] or
+        [np.zeros(0, np.int32)])
+    pos_cat_rank = np.concatenate(
+        [np.arange(w, dtype=np.int32) for w in cat_widths] or
+        [np.zeros(0, np.int32)])
+
+    # final-layout gather: encoded position -> index into
+    # [cont slots (Q_cont*slot) | categorical one-hots (sum cat_widths)]
+    n_slot = len(cont_cols) * slot
+    perm, cont_seen, cat_seen = [], 0, 0
+    for j, col in enumerate(schema):
+        if col.kind == "continuous":
+            base = cont_seen * slot
+            k = col_modes[cont_seen]
+            perm.extend([base] + [base + 1 + m for m in range(k)])
+            cont_seen += 1
+        else:
+            w = enc.label_encoders[j].n
+            perm.extend(range(n_slot + cat_seen, n_slot + cat_seen + w))
+            cat_seen += w
+    perm = jnp.asarray(np.asarray(perm, np.int32))
+    encoded_dim = int(perm.shape[0])
+    assert encoded_dim == enc.encoded_dim
+
+    n_schema = len(schema)
+    pos_cat_col_j = jnp.asarray(pos_cat_col)
+    pos_cat_rank_j = jnp.asarray(pos_cat_rank)
+    le_cats = [enc.label_encoders[j].categories for j in cat_cols]
+
+    def cat_ranks(table: np.ndarray) -> np.ndarray:
+        # per-column C-speed searchsorted in the raw (float64) dtype
+        if not cat_cols:
+            return np.zeros((table.shape[0], 0), np.int32)
+        return np.stack([np.searchsorted(le_cats[q], np.asarray(table[:, j]))
+                         for q, j in enumerate(cat_cols)],
+                        axis=1).astype(np.int32)
+
+    @partial(jax.jit, static_argnames=("n",))
+    def draw_gumbel(key: jax.Array, n: int) -> jnp.ndarray:
+        # identical streams to the per-column loop: split over the FULL
+        # schema, use column j's key, pad each column's (n, K_j) draw to
+        # Kmax (padding never matters: its log-weights are -inf).
+        keys = jax.random.split(key, n_schema)
+        gs = []
+        for q, j in enumerate(cont_cols):
+            g = jax.random.gumbel(keys[j], (n, col_modes[q]), jnp.float32)
+            gs.append(jnp.pad(g, ((0, 0), (0, kmax - col_modes[q]))))
+        return jnp.concatenate(gs, axis=1)
+
+    @jax.jit
+    def assemble(slots: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
+        n = slots.shape[0] if cont_cols else ranks.shape[0]
+        if cat_cols:
+            onehot = (ranks[:, pos_cat_col_j]
+                      == pos_cat_rank_j[None, :]).astype(jnp.float32)
+        else:
+            onehot = jnp.zeros((n, 0), jnp.float32)
+        full = jnp.concatenate([slots, onehot], axis=1)
+        return jnp.take(full, perm, axis=1)
+
+    return EncodePlan(schema=list(schema), cont_cols=cont_cols,
+                      cat_cols=cat_cols, col_modes=col_modes, kmax=kmax,
+                      encoded_dim=encoded_dim, cond_dim=enc.cond_dim,
+                      means=means, stds=stds, logw=logw,
+                      _cat_ranks=cat_ranks, _draw_gumbel=draw_gumbel,
+                      _assemble=assemble)
 
 
 def fit_centralized_encoders(table: np.ndarray, schema: Sequence[ColumnSpec],

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +112,35 @@ def sample_vgm(params: VGMParams, key: jax.Array, n: int) -> jnp.ndarray:
     comp = jax.random.categorical(kc, jnp.log(jnp.maximum(w, 1e-12)), shape=(n,))
     eps = jax.random.normal(kn, (n,))
     return params.means[comp] + params.stds[comp] * eps
+
+
+NEG_INF = -1e30
+
+
+def kernel_log_weights(params: VGMParams) -> jnp.ndarray:
+    """Log mixture weights in the kernel convention: pruned modes carry
+    ``-inf`` (well, -1e30) so a Gumbel-argmax can never select them."""
+    return jnp.where(params.valid,
+                     jnp.log(jnp.maximum(params.weights, 1e-12)), NEG_INF)
+
+
+def pack_vgm_params(vgms: Sequence[VGMParams], kmax: int | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pack per-column VGMs into ``(Q, Kmax)`` arrays for the fused
+    table-wide kernel.  Columns with fewer than Kmax modes are padded with
+    ``-inf`` log-weights (never selected), mean 0 and std 1 (keeps the
+    Gaussian log-pdf finite in the padding)."""
+    ks = [int(p.means.shape[0]) for p in vgms]
+    kmax = max(ks, default=0) if kmax is None else kmax
+    Q = len(vgms)
+    means = jnp.zeros((Q, kmax), jnp.float32)
+    stds = jnp.ones((Q, kmax), jnp.float32)
+    logw = jnp.full((Q, kmax), NEG_INF, jnp.float32)
+    for q, (p, k) in enumerate(zip(vgms, ks)):
+        means = means.at[q, :k].set(p.means.astype(jnp.float32))
+        stds = stds.at[q, :k].set(p.stds.astype(jnp.float32))
+        logw = logw.at[q, :k].set(kernel_log_weights(p))
+    return means, stds, logw
 
 
 @jax.jit

@@ -77,19 +77,19 @@ class TestAggregation:
 
     def test_psum_weighted_matches_host(self, key):
         """SPMD weighted merge over the client axis == host-side average."""
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.core.fedavg import _CHECK_KW, _shard_map
+        from repro.launch.mesh import _make_mesh
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("c",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _make_mesh((n,), ("c",))
         vals = jax.random.normal(key, (n, 8))
         w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (n,)))
 
         def merge(v, wi):
             return psum_weighted(v[0], wi[0], "c")[None]
 
-        out = shard_map(merge, mesh=mesh, in_specs=(P("c"), P("c")),
-                        out_specs=P("c"), check_vma=False)(vals, w)
+        out = _shard_map(merge, mesh=mesh, in_specs=(P("c"), P("c")),
+                         out_specs=P("c"), **{_CHECK_KW: False})(vals, w)
         expect = weighted_average(vals, w)
         np.testing.assert_allclose(np.asarray(out[0]), np.asarray(expect),
                                    rtol=1e-5, atol=1e-6)

@@ -1,0 +1,259 @@
+"""Fused table-wide encoding pipeline: kernel parity, EncodePlan vs the
+per-column loop path, and the vectorized conditional sampler's marginals."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.gan.sampler import ConditionalSampler
+from repro.kernels import ops, ref
+from repro.kernels.vgm_encode import vgm_encode, vgm_encode_table
+from repro.tabular import (ColumnSpec, fit_centralized_encoders, make_dataset,
+                           make_encode_plan, pack_vgm_params)
+from repro.tabular.vgm import NEG_INF, fit_vgm
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _packed_params(key, Q, kmax, ks):
+    """Random packed (Q, kmax) params; column q has ks[q] live modes, the
+    rest padded with -inf log-weights (exactly the plan's packing)."""
+    km, kw = jax.random.split(key)
+    means = jax.random.normal(km, (Q, kmax)) * 3.0
+    stds = jnp.full((Q, kmax), 0.5) + 0.1 * jnp.arange(Q)[:, None]
+    logw = jax.random.normal(kw, (Q, kmax)) * 0.3
+    live = jnp.arange(kmax)[None, :] < jnp.asarray(ks)[:, None]
+    logw = jnp.where(live, logw, NEG_INF)
+    means = jnp.where(live, means, 0.0)
+    stds = jnp.where(live, stds, 1.0)
+    return means, stds, logw
+
+
+class TestVgmEncodeTableKernel:
+    @pytest.mark.parametrize("N,Q,kmax,block_n", [
+        (512, 4, 10, 256),
+        (777, 3, 8, 256),          # row-padding path
+        (300, 1, 10, 128),         # single column degenerates to old shape
+    ])
+    def test_matches_table_ref(self, key, N, Q, kmax, block_n):
+        ks = [kmax - (q % 3) for q in range(Q)]     # mixed-K columns
+        means, stds, logw = _packed_params(key, Q, kmax, ks)
+        kx, kg = jax.random.split(jax.random.fold_in(key, 1))
+        x = jax.random.normal(kx, (N, Q)) * 2.0
+        g = jax.random.gumbel(kg, (N, Q * kmax))
+        out = vgm_encode_table(x, means, stds, logw, g, block_n=block_n,
+                               interpret=True)
+        expect = ref.vgm_encode_table_ref(x, means, stds, logw, g)
+        assert out.shape == (N, Q * (1 + kmax))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_matches_per_column_kernel(self, key):
+        """The fused kernel must agree column-by-column with the original
+        single-column kernel fed the same params and gumbel slices."""
+        N, Q, kmax = 400, 5, 10
+        ks = [10, 7, 10, 3, 5]
+        means, stds, logw = _packed_params(key, Q, kmax, ks)
+        kx, kg = jax.random.split(jax.random.fold_in(key, 2))
+        x = jax.random.normal(kx, (N, Q))
+        g = jax.random.gumbel(kg, (N, Q * kmax))
+        slots = vgm_encode_table(x, means, stds, logw, g, block_n=128,
+                                 interpret=True)
+        S = 1 + kmax
+        for q in range(Q):
+            a, b = vgm_encode(x[:, q], means[q], stds[q], logw[q],
+                              g[:, q * kmax:(q + 1) * kmax], block_n=128,
+                              interpret=True)
+            np.testing.assert_array_equal(np.asarray(slots[:, q * S]),
+                                          np.asarray(a))
+            np.testing.assert_array_equal(
+                np.asarray(slots[:, q * S + 1:(q + 1) * S]), np.asarray(b))
+
+    def test_padded_modes_never_selected(self, key):
+        N, Q, kmax = 600, 3, 9
+        ks = [4, 2, 6]
+        means, stds, logw = _packed_params(key, Q, kmax, ks)
+        kx, kg = jax.random.split(key)
+        x = jax.random.normal(kx, (N, Q)) * 5.0
+        g = jax.random.gumbel(kg, (N, Q * kmax))
+        slots = ref.vgm_encode_table_ref(x, means, stds, logw, g)
+        S = 1 + kmax
+        for q, k in enumerate(ks):
+            beta = np.asarray(slots[:, q * S + 1:(q + 1) * S])
+            assert beta[:, k:].sum() == 0.0, f"column {q} used a padded mode"
+            assert np.all(beta.sum(axis=1) == 1.0)
+
+    def test_ops_wrapper_ref_fallback(self, key):
+        N, Q, kmax = 256, 2, 6
+        means, stds, logw = _packed_params(key, Q, kmax, [6, 4])
+        kx, kg = jax.random.split(key)
+        x = jax.random.normal(kx, (N, Q))
+        g = jax.random.gumbel(kg, (N, Q * kmax))
+        a = ops.vgm_encode_table(x, means, stds, logw, g, use_pallas=False)
+        b = ops.vgm_encode_table(x, means, stds, logw, g, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ds = make_dataset("adult", n_rows=1200, seed=3)
+    key = jax.random.PRNGKey(3)
+    enc = fit_centralized_encoders(ds.data, ds.schema, key)
+    return ds, enc, key
+
+
+class TestEncodePlan:
+    def test_full_table_equivalence(self, fitted):
+        """EncodePlan.encode is BIT-IDENTICAL to the per-column loop path
+        (same per-column Gumbel streams, same -inf padding convention)."""
+        ds, enc, key = fitted
+        k = jax.random.fold_in(key, 11)
+        fused = enc.encode(ds.data, k, interpret=True)
+        loop = enc.encode_loop(ds.data, k, interpret=True)
+        assert fused.shape == (ds.data.shape[0], enc.encoded_dim)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(loop))
+
+    def test_matches_ref_backend(self, fitted):
+        ds, enc, key = fitted
+        k = jax.random.fold_in(key, 12)
+        fused = enc.encode(ds.data, k, use_pallas=False)
+        loop = enc.encode_loop(ds.data, k, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(loop))
+
+    def test_mixed_kmax_schema(self, key):
+        """Columns with different max_modes pad to Kmax inside the plan."""
+        rng = np.random.default_rng(0)
+        n = 800
+        table = np.stack([
+            rng.normal(0, 1, n),
+            rng.integers(0, 4, n).astype(np.float64),
+            np.where(rng.random(n) < 0.5, rng.normal(-4, 0.5, n),
+                     rng.normal(4, 0.5, n)),
+        ], axis=1)
+        schema = [ColumnSpec("a", "continuous", max_modes=4),
+                  ColumnSpec("b", "categorical"),
+                  ColumnSpec("c", "continuous", max_modes=10)]
+        enc = fit_centralized_encoders(table, schema, key)
+        plan = enc.plan()
+        assert plan.kmax == 10 and plan.col_modes == (4, 10)
+        k = jax.random.fold_in(key, 5)
+        np.testing.assert_array_equal(
+            np.asarray(enc.encode(table, k, interpret=True)),
+            np.asarray(enc.encode_loop(table, k, interpret=True)))
+
+    def test_large_category_ids_stay_float64(self, key):
+        """Category ids adjacent in float64 but equal in float32 (>= 2^24,
+        e.g. hashed ids) must one-hot to distinct ranks — the plan's rank
+        pass runs in the raw dtype on host, like LabelEncoder.transform."""
+        ids = np.array([2.0 ** 24 + d for d in range(4)])
+        rng = np.random.default_rng(5)
+        table = rng.choice(ids, (500, 1))
+        enc = fit_centralized_encoders(
+            table, [ColumnSpec("c", "categorical")], key)
+        fused = np.asarray(enc.encode(table, key))
+        loop = np.asarray(enc.encode_loop(table, key))
+        np.testing.assert_array_equal(fused, loop)
+        np.testing.assert_array_equal(enc.decode(fused)[:, 0], table[:, 0])
+
+    def test_all_categorical_and_all_continuous(self, key):
+        rng = np.random.default_rng(1)
+        n = 300
+        cat_table = rng.integers(0, 5, (n, 3)).astype(np.float64)
+        cat_schema = [ColumnSpec(f"c{j}", "categorical") for j in range(3)]
+        enc = fit_centralized_encoders(cat_table, cat_schema, key)
+        np.testing.assert_array_equal(
+            np.asarray(enc.encode(cat_table, key)),
+            np.asarray(enc.encode_loop(cat_table, key)))
+
+        cont_table = rng.normal(0, 2, (n, 2))
+        cont_schema = [ColumnSpec(f"x{j}", "continuous") for j in range(2)]
+        enc2 = fit_centralized_encoders(cont_table, cont_schema, key)
+        np.testing.assert_array_equal(
+            np.asarray(enc2.encode(cont_table, key, interpret=True)),
+            np.asarray(enc2.encode_loop(cont_table, key, interpret=True)))
+
+    def test_single_kernel_dispatch(self, fitted):
+        """The fused path issues ONE table kernel dispatch; the loop path
+        issues one per continuous column."""
+        ds, enc, key = fitted
+        q_cont = sum(c.kind == "continuous" for c in ds.schema)
+        ops.DISPATCH_COUNTS.clear()
+        enc.encode(ds.data, key, interpret=True)
+        assert ops.DISPATCH_COUNTS["vgm_encode_table"] == 1
+        assert ops.DISPATCH_COUNTS["vgm_encode"] == 0
+        ops.DISPATCH_COUNTS.clear()
+        enc.encode_loop(ds.data, key, interpret=True)
+        assert ops.DISPATCH_COUNTS["vgm_encode"] == q_cont
+        # the auto default off-TPU routes to the (bit-identical) reference:
+        # still one fused call, zero per-column kernel dispatches
+        ops.DISPATCH_COUNTS.clear()
+        enc.encode(ds.data, key)
+        assert ops.DISPATCH_COUNTS["vgm_encode"] == 0
+        total = (ops.DISPATCH_COUNTS["vgm_encode_table"]
+                 + ops.DISPATCH_COUNTS["vgm_encode_table_ref"])
+        assert total == 1
+        ops.DISPATCH_COUNTS.clear()
+
+    def test_decode_roundtrip_through_plan(self, fitted):
+        """Fused-encoded categoricals decode back to the raw table; the
+        continuous columns decode to within their sampled mode's span."""
+        ds, enc, key = fitted
+        dec = enc.decode(enc.encode(ds.data, jax.random.fold_in(key, 21),
+                                    interpret=True))
+        for j, col in enumerate(ds.schema):
+            if col.kind == "categorical":
+                np.testing.assert_array_equal(dec[:, j], ds.data[:, j])
+            else:
+                assert np.corrcoef(dec[:, j].astype(float),
+                                   ds.data[:, j].astype(float))[0, 1] > 0.9
+
+
+class TestVectorizedSampler:
+    @pytest.fixture(scope="class")
+    def sampler_pair(self, fitted):
+        ds, enc, key = fitted
+        encoded = np.asarray(enc.encode(ds.data, key))
+        return (ConditionalSampler(encoded, enc, seed=7),
+                ConditionalSampler(encoded, enc, seed=8), encoded)
+
+    def test_batch_invariants(self, sampler_pair):
+        s, _, encoded = sampler_pair
+        cond, mask, real = s.sample(256)
+        assert cond.shape == (256, s.cond_dim)
+        assert mask.shape == (256, s.n_spans)
+        assert real.shape == (256, encoded.shape[1])
+        assert np.all(cond.sum(axis=1) == 1.0)
+        assert np.all(mask.sum(axis=1) == 1.0)
+        # the fetched real row must carry the conditioned category
+        for i in range(0, 256, 17):
+            si = int(mask[i].argmax())
+            sp = s.spans[si]
+            c = cond[i, s._span_offsets[si]:s._span_offsets[si + 1]].argmax()
+            assert real[i, sp.start:sp.start + sp.width].argmax() == c
+
+    def test_category_marginals_match_loop(self, sampler_pair):
+        """Vectorized draws reproduce the loop sampler's log-frequency
+        category marginals span by span."""
+        s_vec, s_loop, _ = sampler_pair
+        n = 60_000
+        cond_v, mask_v, _ = s_vec.sample(n)
+        cond_l, mask_l, _ = s_loop.sample_loop(n)
+        assert np.abs(mask_v.mean(0) - mask_l.mean(0)).max() < 0.01
+        for si in range(s_vec.n_spans):
+            lo, hi = s_vec._span_offsets[si], s_vec._span_offsets[si + 1]
+            in_span_v = mask_v[:, si] == 1.0
+            in_span_l = mask_l[:, si] == 1.0
+            pv = cond_v[in_span_v, lo:hi].mean(0)
+            pl = cond_l[in_span_l, lo:hi].mean(0)
+            np.testing.assert_allclose(pv, pl, atol=0.035)
+            # and both match the analytic log-frequency target
+            np.testing.assert_allclose(pv, s_vec.cat_logfreq[si], atol=0.035)
+
+    def test_presample_rounds_one_pass(self, sampler_pair):
+        s, _, encoded = sampler_pair
+        c, m, r = s.presample_rounds(3, 4, 50)
+        assert c.shape[:3] == (3, 4, 50)
+        assert m.shape[:3] == (3, 4, 50)
+        assert r.shape == (3, 4, 50, encoded.shape[1])
+        assert np.all(c.sum(axis=-1) == 1.0)
