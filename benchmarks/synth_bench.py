@@ -1,0 +1,167 @@
+"""Device-resident synthesis engine benchmarks.
+
+Two comparisons on the paper-scale 40k x 30 mixed table:
+
+  decode — generator-output inversion through the per-column
+      ``decode_loop`` (one ``decode_column`` dispatch + host argmax per
+      column) vs the fused ``DecodePlan`` (one ``vgm_decode_table``
+      kernel dispatch for ALL continuous columns).
+
+  round loop — the PR-1 presampled client round (host
+      ``presample_rounds`` + staged batch transfer + jitted scan, one
+      dispatch per round) vs the :class:`repro.synth.RoundEngine`
+      (sampler draws + D/G steps inside a single jitted ``lax.scan``,
+      zero host round-trips between steps).
+
+CPU wall times plus the roofline-PROJECTED TPU v5e time for the fused
+decode kernel, same convention as encode_bench.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gan.ctgan import CTGANConfig
+from repro.gan.sampler import ConditionalSampler
+from repro.gan.trainer import init_gan_state, local_train_scan, make_train_steps
+from repro.kernels import ops
+from repro.launch.roofline import HBM_BW
+from repro.synth import DeviceSampler, RoundEngine
+from repro.tabular import fit_centralized_encoders
+
+from .common import emit
+from .encode_bench import _mixed_table, _time
+
+
+def _time_interleaved(fns: list, iters: int = 4) -> list[float]:
+    """Best-of-N wall times (us) with the candidates' timed iterations
+    INTERLEAVED.  The round-loop paths run ~1s each on a cgroup-throttled
+    CPU, where sequential timing charges whichever path runs second with
+    the throttle; alternating iterations exposes both paths to the same
+    machine state, and the per-path minimum is the stable signal."""
+    for fn in fns:
+        jax.block_until_ready(fn())              # warmup / compile
+    best = [float("inf")] * len(fns)
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            out = fn()
+            if out is not None:
+                jax.block_until_ready(out)
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [b * 1e6 for b in best]
+
+
+def bench_decode(N: int = 40_000, Q: int = 30) -> dict:
+    table, schema = _mixed_table(N, Q)
+    key = jax.random.PRNGKey(0)
+    enc = fit_centralized_encoders(table, schema, key)
+    q_cont = sum(c.kind == "continuous" for c in schema)
+    encoded = enc.encode(table, key, use_pallas=False)
+    plan = enc.decode_plan()
+
+    us_loop = _time(lambda: enc.decode_loop(encoded))
+    us_fused = _time(lambda: enc.decode(encoded, use_pallas=False))
+    us_fused_k = _time(lambda: enc.decode(encoded, interpret=True))
+
+    ops.DISPATCH_COUNTS.clear()
+    enc.decode(encoded, interpret=True)
+    fused_disp = ops.DISPATCH_COUNTS["vgm_decode_table"]
+    ops.DISPATCH_COUNTS.clear()
+
+    # roofline projection for the fused kernel: slots in, columns out
+    K = plan.kmax
+    hbm = (N * q_cont * (1 + K) * 4      # packed slots
+           + N * q_cont * 4)            # decoded columns
+    proj = hbm / HBM_BW * 1e6
+
+    emit(f"decode/loop_N{N}_Q{Q}", us_loop,
+         f"kernel_dispatches={q_cont}")
+    emit(f"decode/fused_N{N}_Q{Q}", us_fused,
+         f"kernel_dispatches={fused_disp};speedup={us_loop / us_fused:.2f}x;"
+         f"tpu_roofline_us={proj:.1f}")
+    emit(f"decode/fused_interpret_N{N}_Q{Q}", us_fused_k, "backend=pallas")
+    assert fused_disp == 1
+    return {"N": N, "Q": Q, "q_cont": q_cont, "us_loop": us_loop,
+            "us_fused": us_fused, "us_fused_interpret": us_fused_k,
+            "dispatches": {"loop": q_cont, "fused": fused_disp},
+            "tpu_roofline_us": proj}
+
+
+def bench_round_loop(N: int = 40_000, Q: int = 30, rounds: int = 2,
+                     steps: int = 4, batch: int = 500) -> dict:
+    """Full client rounds (sampler draws + D/G steps): PR-1 presampled
+    path vs the device-resident engine — the acceptance workload."""
+    table, schema = _mixed_table(N, Q)
+    key = jax.random.PRNGKey(0)
+    enc = fit_centralized_encoders(table, schema, key)
+    encoded = np.asarray(enc.encode(table, key, use_pallas=False))
+    cfg = CTGANConfig(batch_size=batch)
+    spans, cond_spans = tuple(enc.spans()), tuple(enc.condition_spans())
+
+    host = ConditionalSampler(encoded, enc, seed=0)
+    dev = DeviceSampler(encoded, enc)
+    state0 = init_gan_state(jax.random.fold_in(key, 1), cfg, enc.cond_dim,
+                            enc.encoded_dim)
+    step_fn = make_train_steps(cfg, spans, cond_spans)
+    scan_fn = jax.jit(lambda st, b: local_train_scan(step_fn, st, b))
+    engine = RoundEngine(cfg, spans, cond_spans, batch=batch,
+                         local_steps=steps)
+
+    def presampled_rounds():
+        # PR-1 path: every round stages rounds x steps x batch arrays
+        # through numpy and ships them in before the scan can start.
+        st = state0
+        for _ in range(rounds):
+            c, m, r = host.presample_rounds(1, steps, batch)
+            st, _ = scan_fn(st, (jnp.asarray(c[0]), jnp.asarray(m[0]),
+                                 jnp.asarray(r[0])))
+        return st.step
+
+    def engine_rounds():
+        # device-resident path: ALL rounds in one jitted scan-of-scans;
+        # only the model state and one key cross the host boundary.
+        st, _ = engine.run(state0, dev.tables, jax.random.fold_in(key, 2),
+                           rounds)
+        return st.step
+
+    us_pre, us_eng = _time_interleaved([presampled_rounds, engine_rounds],
+                                       iters=6)
+    speedup = us_pre / us_eng
+
+    # The batch-supply component in isolation (the part the engine changes;
+    # D/G steps are identical in both paths and ~99% of the round on CPU,
+    # so the full-round ratio above sits within throttle noise of 1.0):
+    # host presample + device transfer vs the on-device draw.
+    total = steps * batch
+    def stage_host():
+        c, m, r = host.sample(total)
+        return jnp.asarray(c), jnp.asarray(m), jnp.asarray(r)
+    from repro.synth import draw_batch
+    key_d = jax.random.fold_in(key, 3)
+    us_stage_h, us_stage_d = _time_interleaved(
+        [stage_host,
+         lambda: draw_batch(dev.tables, key_d, total, dev.cond_dim)],
+        iters=8)
+    emit(f"round/presampled_N{N}_R{rounds}x{steps}x{batch}", us_pre,
+         "host_staging=per_round")
+    emit(f"round/engine_N{N}_R{rounds}x{steps}x{batch}", us_eng,
+         f"speedup={speedup:.2f}x;host_transfers=state+key")
+    emit(f"round/staging_B{total}", us_stage_d,
+         f"host_presample_us={us_stage_h:.0f};"
+         f"draw_speedup={us_stage_h / us_stage_d:.2f}x")
+    return {"N": N, "Q": Q, "rounds": rounds, "steps": steps, "batch": batch,
+            "us_presampled": us_pre, "us_engine": us_eng, "speedup": speedup,
+            "us_staging_host": us_stage_h, "us_staging_device": us_stage_d}
+
+
+def run_all():
+    # round loop first: it is the noise-sensitive comparison (~1s/path on
+    # a throttled CPU), so measure it before the decode sweeps heat up
+    # the process.
+    out = {"round_loop": bench_round_loop()}
+    out["decode"] = bench_decode()
+    return out

@@ -6,6 +6,11 @@ Simulation model: all clients execute "in parallel" as a stacked client
 axis under ``jax.vmap`` (host-side loop-free), mirroring the paper's
 rpc_async fan-out; the federator's merge is :func:`weighted_average`.
 Per-round wall-clock and bytes-on-wire come from :mod:`.comm_model`.
+
+Training rounds run through the device-resident :mod:`repro.synth`
+engine: conditional batches are drawn inside the round's ``lax.scan``
+(no presampled host batches), and synthesis for evaluation goes through
+the fused one-dispatch decode kernel.
 """
 from __future__ import annotations
 
@@ -18,9 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..gan.ctgan import CTGANConfig
-from ..gan.sampler import ConditionalSampler
-from ..gan.trainer import (GANState, init_gan_state, make_round_batches,
-                           make_train_steps, sample_synthetic)
+from ..gan.trainer import GANState, init_gan_state
+from ..synth import (DeviceSampler, RoundEngine, draw_batch,
+                     stack_sampler_tables, synthesize_table)
 from ..tabular.encoders import ColumnSpec, TableEncoders, fit_centralized_encoders
 from ..tabular.metrics import similarity_report
 from . import comm_model
@@ -77,14 +82,16 @@ def _setup_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     enc = init.encoders
     spans = tuple(enc.spans())
     cond_spans = tuple(enc.condition_spans())
-    samplers = [ConditionalSampler(
-        np.asarray(enc.encode(d, jax.random.fold_in(k_enc, i))), enc,
-        seed=seed + i) for i, d in enumerate(client_data)]
+    # stack the per-client sampler tables right away so only ONE device
+    # copy (the stacked, vmap-ready one) stays resident for the run
+    tables = stack_sampler_tables([DeviceSampler(
+        np.asarray(enc.encode(d, jax.random.fold_in(k_enc, i))), enc)
+        for i, d in enumerate(client_data)])
     # Federator initializes ONE model and distributes it (identical start).
     state0 = init_gan_state(k_model, cfg, enc.cond_dim, enc.encoded_dim)
     states = [state0._replace(rng=jax.random.fold_in(state0.rng, i))
               for i in range(P)]
-    return init, w, enc, spans, cond_spans, samplers, _stack_states(states)
+    return init, w, enc, spans, cond_spans, tables, _stack_states(states)
 
 
 def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
@@ -97,16 +104,17 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     """Fed-TGAN (weighting='fedtgan'), vanilla FL ('uniform'), or the
     Fed\\SW ablation ('quantity')."""
     P = len(client_data)
-    init, w, enc, spans, cond_spans, samplers, states = _setup_federated(
+    init, w, enc, spans, cond_spans, tables, states = _setup_federated(
         client_data, schema, cfg, seed, weighting)
-    step_fn = make_train_steps(cfg, spans, cond_spans)
+    engine = RoundEngine(cfg, spans, cond_spans, batch=cfg.batch_size,
+                         local_steps=local_steps)
 
-    def one_round(states, batches):
-        def local(st, b):
-            def body(s, batch):
-                return step_fn(s, batch)
-            return jax.lax.scan(body, st, b)
-        states, metrics = jax.vmap(local)(states, batches)
+    def one_round(states, tables, key):
+        """Fed-TGAN round as ONE jitted program: per-client sampler draws
+        + local D/G steps (vmapped lax.scan) + weighted merge — zero host
+        transfers between steps."""
+        states, metrics = jax.vmap(engine.local_round)(
+            states, tables, jax.random.split(key, P))
         merged_g = weighted_average(states.g_params, w)
         merged_d = weighted_average(states.d_params, w)
         states = states._replace(g_params=_replicate(merged_g, P),
@@ -120,18 +128,16 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
 
     history = []
     key_eval = jax.random.PRNGKey(seed + 999)
+    key_round = jax.random.PRNGKey(seed + 777)
     t0 = time.perf_counter()
     for r in range(rounds):
-        cond, mask, real = make_round_batches(samplers, 1, local_steps,
-                                              cfg.batch_size)
-        batches = (cond[:, 0], mask[:, 0], real[:, 0])
-        states, metrics = one_round(states, batches)
+        states, metrics = one_round(states, tables,
+                                    jax.random.fold_in(key_round, r))
         if eval_real is not None and ((r + 1) % eval_every == 0 or r == rounds - 1):
             g = jax.tree.map(lambda x: x[0], states.g_params)
-            synth = sample_synthetic(g, jax.random.fold_in(key_eval, r), cfg,
-                                     spans, enc.cond_dim, eval_samples)
-            rep = similarity_report(eval_real, enc.decode(np.asarray(synth)),
-                                    schema)
+            synth_raw = synthesize_table(g, jax.random.fold_in(key_eval, r),
+                                         cfg, enc, eval_samples)
+            rep = similarity_report(eval_real, synth_raw, schema)
             rep.update(round=r + 1,
                        d_loss=float(jnp.mean(metrics["d_loss"])),
                        g_loss=float(jnp.mean(metrics["g_loss"])),
@@ -154,24 +160,25 @@ def run_centralized(data: np.ndarray, schema: list[ColumnSpec], *,
     enc = fit_centralized_encoders(data, schema, k_enc)
     spans = tuple(enc.spans())
     cond_spans = tuple(enc.condition_spans())
-    sampler = ConditionalSampler(np.asarray(enc.encode(data, k_e2)), enc, seed)
+    sampler = DeviceSampler(np.asarray(enc.encode(data, k_e2)), enc)
     state = init_gan_state(k_model, cfg, enc.cond_dim, enc.encoded_dim)
-    step_fn = jax.jit(make_train_steps(cfg, spans, cond_spans))
+    engine = RoundEngine(cfg, spans, cond_spans, batch=cfg.batch_size,
+                         local_steps=epoch_steps)
 
     history = []
+    key_ep = jax.random.PRNGKey(seed + 333)
     t0 = time.perf_counter()
     for ep in range(epochs):
-        for _ in range(epoch_steps):
-            c, m, r = sampler.sample(cfg.batch_size)
-            state, metrics = step_fn(state, (jnp.asarray(c), jnp.asarray(m),
-                                             jnp.asarray(r)))
+        # whole epoch = one jitted scan (draws + steps on device)
+        state, metrics = engine.run_round(state, sampler.tables,
+                                          jax.random.fold_in(key_ep, ep))
         if eval_real is not None and ((ep + 1) % eval_every == 0 or ep == epochs - 1):
-            synth = sample_synthetic(state.g_params,
-                                     jax.random.fold_in(key, ep), cfg, spans,
-                                     enc.cond_dim, eval_samples)
-            rep = similarity_report(eval_real, enc.decode(np.asarray(synth)), schema)
-            rep.update(round=ep + 1, d_loss=float(metrics["d_loss"]),
-                       g_loss=float(metrics["g_loss"]),
+            synth_raw = synthesize_table(state.g_params,
+                                         jax.random.fold_in(key, ep), cfg,
+                                         enc, eval_samples)
+            rep = similarity_report(eval_real, synth_raw, schema)
+            rep.update(round=ep + 1, d_loss=float(metrics["d_loss"][-1]),
+                       g_loss=float(metrics["g_loss"][-1]),
                        t=time.perf_counter() - t0)
             history.append(rep)
     dt = time.perf_counter() - t0
@@ -190,21 +197,24 @@ def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
     P = len(client_data)
     # MD also needs agreed encoders; grant it the same §4.1 init (the paper
     # does the same for fairness).
-    init, _, enc, spans, cond_spans, samplers, states = _setup_federated(
+    init, _, enc, spans, cond_spans, tables, states = _setup_federated(
         client_data, schema, cfg, seed, "uniform")
-    step_fn = make_train_steps(cfg, spans, cond_spans)
     # keep one central G (slice 0), stack of P discriminators.
     g_state = jax.tree.map(lambda x: x[0], states)
 
-    def md_step(g_params, g_opt, d_states, batches, key):
+    def md_step(g_params, g_opt, d_states, tables, key):
         """One global step: every client D trains on central-G fakes; G
-        updates from the average of per-client generator losses."""
+        updates from the average of per-client generator losses.  Client
+        batches are drawn on device (no host staging)."""
         from ..gan.ctgan import (apply_activations, conditional_loss,
                                  discriminator_forward, generator_forward,
                                  gradient_penalty)
         from ..optim import adam
         opt = adam(cfg.lr, cfg.b1, cfg.b2)
-        conds, masks, reals = batches
+        key, kb = jax.random.split(key)
+        conds, masks, reals = jax.vmap(
+            lambda tb, k: draw_batch(tb, k, cfg.batch_size, enc.cond_dim))(
+            tables, jax.random.split(kb, P))
         n_hidden = len(cfg.gen_hidden)
 
         def d_loss_one(d_params, cond, real, k):
@@ -261,19 +271,16 @@ def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
     t0 = time.perf_counter()
     for ep in range(epochs):
         for _ in range(steps_per_epoch):
-            c, m, r = zip(*[s.sample(cfg.batch_size) for s in samplers])
-            batches = (jnp.asarray(np.stack(c)), jnp.asarray(np.stack(m)),
-                       jnp.asarray(np.stack(r)))
             key, k = jax.random.split(key)
             g_params, g_opt, d_states, gl = md_step(g_params, g_opt,
-                                                    d_states, batches, k)
+                                                    d_states, tables, k)
         if swap:                                   # p2p discriminator swap
             perm = rng.permutation(P)
             d_states = jax.tree.map(lambda x: x[perm], d_states)
         if eval_real is not None and ((ep + 1) % eval_every == 0 or ep == epochs - 1):
-            synth = sample_synthetic(g_params, jax.random.fold_in(key, ep),
-                                     cfg, spans, enc.cond_dim, eval_samples)
-            rep = similarity_report(eval_real, enc.decode(np.asarray(synth)), schema)
+            synth_raw = synthesize_table(g_params, jax.random.fold_in(key, ep),
+                                         cfg, enc, eval_samples)
+            rep = similarity_report(eval_real, synth_raw, schema)
             rep.update(round=ep + 1, g_loss=float(gl),
                        t=time.perf_counter() - t0)
             history.append(rep)

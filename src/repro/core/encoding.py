@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..tabular.encoders import ColumnSpec, LabelEncoder, TableEncoders
-from ..tabular.vgm import VGMParams, fit_vgm, merge_client_vgms
+from ..tabular.vgm import (VGMParams, fit_vgm, merge_client_vgms,
+                           merge_client_vgms_table)
 
 
 @dataclasses.dataclass
@@ -89,10 +90,33 @@ def federated_encoder_init(stats: list[ClientStats], schema: list[ColumnSpec],
             for i in range(P):
                 row = per_client[i]
                 client_freqs[i][j] = row / max(row.sum(), 1.0)
-        else:
-            vgms[j] = merge_client_vgms([s.vgms[j] for s in stats], n_rows,
-                                        keys[j], max_modes=max_modes,
-                                        samples_cap=samples_cap)
+
+    # Continuous columns merge through the vmapped packed-layout path: one
+    # bootstrap-sample + refit dispatch per group of columns sharing a
+    # per-client K signature (usually one group), not one per column.
+    # Per-column keys match the old loop, so the result is bit-identical
+    # to merge_client_vgms.  Columns whose clients DISAGREE on K (version
+    # skew, per-client configs) cannot stack — they fall back to the
+    # per-column merge.
+    by_k: dict[tuple[int, ...], list[int]] = {}
+    for j, col in enumerate(schema):
+        if col.kind == "continuous":
+            sig = tuple(int(s.vgms[j].means.shape[0]) for s in stats)
+            by_k.setdefault(sig, []).append(j)
+    for sig, js in by_k.items():
+        if len(set(sig)) > 1:
+            for j in js:
+                vgms[j] = merge_client_vgms([s.vgms[j] for s in stats],
+                                            n_rows, keys[j],
+                                            max_modes=max_modes,
+                                            samples_cap=samples_cap)
+            continue
+        merged = merge_client_vgms_table(
+            [[s.vgms[j] for j in js] for s in stats], n_rows,
+            jnp.stack([keys[j] for j in js]), max_modes=max_modes,
+            samples_cap=samples_cap)
+        for q, j in enumerate(js):
+            vgms[j] = jax.tree.map(lambda x, q=q: x[q], merged)
     enc = TableEncoders(list(schema), les, vgms)
     return FederatedInit(enc, global_freqs, client_freqs, n_rows)
 

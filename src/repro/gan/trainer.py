@@ -5,6 +5,12 @@ the encoded-row spans and config.  ``local_train_scan`` runs E local steps
 under ``lax.scan`` — the unit of work a federated client performs between
 aggregations; it is vmap-able over a stacked client axis, which is how the
 simulation drivers execute all clients "in parallel" like the real system.
+
+The training drivers now compose ``make_train_steps`` with on-device
+conditional sampling through :class:`repro.synth.RoundEngine`, so
+``make_round_batches`` / ``local_train_scan`` remain here as the
+presampled-path baseline (benchmarked against the engine in
+``benchmarks/synth_bench.py``).
 """
 from __future__ import annotations
 

@@ -14,11 +14,17 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .mlstm_chunk import mlstm_chunk as _mlstm_chunk
+from .vgm_decode import vgm_decode_table as _vgm_decode_table
 from .vgm_encode import vgm_encode as _vgm_encode
 from .vgm_encode import vgm_encode_table as _vgm_encode_table
 from .weighted_agg import weighted_agg as _weighted_agg
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+# The decode ref runs under jit (unlike the other eager refs): the fused
+# decode must bit-match the jitted per-column ``decode_column`` oracle, and
+# XLA's FMA contraction of ``alpha * 4 * sd + mu`` only happens inside jit.
+_vgm_decode_table_ref = jax.jit(ref.vgm_decode_table_ref)
 
 # Host-level kernel dispatch counter (per wrapper call); benchmarks use it
 # to prove the fused encode path issues ONE dispatch where the per-column
@@ -80,6 +86,29 @@ def vgm_encode_table(x_cols, means, stds, log_weights, gumbel, *,
         block_n = max(int(x_cols.shape[0]), 1) if interp else 1024
     return _vgm_encode_table(x_cols, means, stds, log_weights, gumbel,
                              block_n=block_n, interpret=interp)
+
+
+def vgm_decode_table(slots, means, stds, *, use_pallas=None, interpret=None,
+                     block_n=None):
+    """Fused table-wide VGM decode: all continuous columns inverted in ONE
+    kernel dispatch.  ``slots`` is the encode kernel's output layout
+    (N, Q*(1+Kmax)) with -inf in padded beta lanes; means/stds the packed
+    ``(Q, Kmax)`` params.  Returns raw columns (N, Q).
+
+    ``use_pallas=None`` auto-routes like :func:`vgm_encode_table`, and
+    ``block_n=None`` picks the same row tile policy (1024 on TPU, the
+    whole table in interpret mode)."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU or interpret is not None
+    if not use_pallas:
+        DISPATCH_COUNTS["vgm_decode_table_ref"] += 1
+        return _vgm_decode_table_ref(slots, means, stds)
+    DISPATCH_COUNTS["vgm_decode_table"] += 1
+    interp = (not _ON_TPU) if interpret is None else interpret
+    if block_n is None:
+        block_n = max(int(slots.shape[0]), 1) if interp else 1024
+    return _vgm_decode_table(slots, means, stds, block_n=block_n,
+                             interpret=interp)
 
 
 def mlstm_chunk(q, k, v, log_f, log_i, *, use_pallas=True, interpret=None,

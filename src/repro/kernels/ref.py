@@ -81,6 +81,25 @@ def vgm_encode_table_ref(x_cols: jnp.ndarray, means: jnp.ndarray,
     return slots.reshape(N, Q * (1 + K))
 
 
+def vgm_decode_table_ref(slots: jnp.ndarray, means: jnp.ndarray,
+                         stds: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused table-wide decode kernel.
+
+    slots: (N, Q*(1+K)) per-column ``[alpha, beta_0..beta_{K-1}]`` (padded
+    beta lanes hold -inf); means/stds: (Q, K) packed params.
+    Returns x_cols (N, Q) raw continuous values.
+    """
+    N = slots.shape[0]
+    Q, K = means.shape
+    s = slots.reshape(N, Q, 1 + K)
+    alpha = s[:, :, 0]
+    comp = jnp.argmax(s[:, :, 1:], axis=2)                       # (N, Q)
+    cols = jnp.arange(Q)[None, :]
+    mu = means[cols, comp]
+    sd = stds[cols, comp]
+    return jnp.clip(alpha, -1.0, 1.0) * 4.0 * sd + mu
+
+
 def mlstm_chunk_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     log_f: jnp.ndarray, log_i: jnp.ndarray) -> jnp.ndarray:
     """Per-step stabilized mLSTM recurrence (oracle for mlstm_chunk).

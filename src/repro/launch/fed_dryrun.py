@@ -121,11 +121,18 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
     """The PAPER'S OWN workload on the production mesh: one Fed-TGAN round
     of CTGAN (G+D per client, weighted merge of both nets).  Clients ride
     the data axes; encoders come from the §4.1 protocol on a synthetic
-    Adult table (host-side, as in the real system)."""
+    Adult table (host-side, as in the real system).
+
+    The round lowers through the device-resident :mod:`repro.synth`
+    engine: each client's conditional batches are drawn INSIDE the local
+    ``lax.scan`` from sharded sampler tables, so the only per-round inputs
+    are model state, tables, weights, and one PRNG key — no presampled
+    batch arrays cross the host/device boundary."""
     import numpy as np
     from ..configs.ctgan_paper import CONFIG as GAN_CFG, MAX_MODES
     from ..core.encoding import compute_client_stats, federated_encoder_init
-    from ..gan.trainer import init_gan_state, make_train_steps, GANState
+    from ..gan.trainer import init_gan_state
+    from ..synth import DeviceSampler, RoundEngine
     from ..tabular.datasets import make_dataset, partition_full_copy
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -144,10 +151,12 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
     enc = init.encoders
     spans, cond_spans = tuple(enc.spans()), tuple(enc.condition_spans())
     # Encode a shard through the fused one-dispatch plan — the same path
-    # real clients run every round — and size the batch specs off it.
+    # real clients run every round — and build one client's device sampler
+    # tables off it; the stacked-client tables are sized from its shapes.
     plan = enc.plan()
     encoded = plan.encode(ds.data[:256], jax.random.fold_in(key, 99))
     assert encoded.shape[1] == plan.encoded_dim == enc.encoded_dim
+    tables = DeviceSampler(np.asarray(encoded), enc).tables
 
     state_shape = jax.eval_shape(
         lambda k: init_gan_state(k, GAN_CFG, enc.cond_dim, enc.encoded_dim),
@@ -156,24 +165,18 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
         (n_clients,) + s.shape, s.dtype), state_shape)
     st_sp = jax.tree.map(lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))),
                          st_sh)
-    B = GAN_CFG.batch_size
-    batch = (jax.ShapeDtypeStruct((n_clients, local_steps, B, plan.cond_dim),
-                                  jnp.float32),
-             jax.ShapeDtypeStruct((n_clients, local_steps, B,
-                                   len(cond_spans)), jnp.float32),
-             jax.ShapeDtypeStruct((n_clients, local_steps, B,
-                                   int(encoded.shape[1])), jnp.float32))
-    bspecs = jax.tree.map(lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))),
-                          batch)
+    tb_sh = jax.tree.map(lambda a: jax.ShapeDtypeStruct(
+        (n_clients,) + a.shape, a.dtype), tables)
+    tb_sp = jax.tree.map(lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))),
+                         tb_sh)
     weights = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
-    step_fn = make_train_steps(GAN_CFG, spans, cond_spans)
+    key_sh = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    engine = RoundEngine(GAN_CFG, spans, cond_spans,
+                         batch=GAN_CFG.batch_size, local_steps=local_steps)
 
-    def fed_round(states, batches, w):
-        def local(st, bts):
-            def body(s, b):
-                return step_fn(s, b)
-            return jax.lax.scan(body, st, bts)
-        states, metrics = jax.vmap(local)(states, batches)
+    def fed_round(states, tables, w, key):
+        states, metrics = jax.vmap(engine.local_round)(
+            states, tables, jax.random.split(key, n_clients))
         wn = w / jnp.maximum(jnp.sum(w), 1e-12)
 
         def merge(leaf):
@@ -189,10 +192,10 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
     from .shardings import named
     with mesh:
         jitted = jax.jit(fed_round,
-                         in_shardings=(named(mesh, st_sp),
-                                       named(mesh, bspecs), named(mesh, P(dp))),
+                         in_shardings=(named(mesh, st_sp), named(mesh, tb_sp),
+                                       named(mesh, P(dp)), None),
                          out_shardings=(named(mesh, st_sp), None))
-        lowered = jitted.lower(st_sh, batch, weights)
+        lowered = jitted.lower(st_sh, tb_sh, weights, key_sh)
     return lowered, mesh, n_clients
 
 

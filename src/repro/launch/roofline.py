@@ -65,6 +65,37 @@ def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
     return dims, m.group(1)
 
 
+def _split_operands(s: str) -> list[str]:
+    """Split an operand list on top-level commas only — inline operand
+    types carry commas inside ``[dims]`` / ``{layout}`` / tuple parens."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _operand_type(tok: str, table: dict[str, str]) -> str:
+    """Resolve an operand token to its type string.  Newer XLA prints the
+    operand type inline ('f32[64,128]{1,0} %name'); older HLO prints bare
+    '%name', resolved through the computation's symbol table."""
+    tok = tok.strip()
+    if not tok:
+        return ""
+    if "[" in tok and _SHAPE_RE.search(tok):
+        return tok
+    return table.get(tok.split()[-1].lstrip("%"), "")
+
+
 @dataclasses.dataclass
 class HLOStats:
     flops: float = 0.0
@@ -202,9 +233,8 @@ def analyze_hlo(text: str, default_trip: int = 1) -> HLOStats:
                 mm = re.search(r"dot\(([^)]*)\)", rhs)
                 cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
                 if res and mm and cdims is not None:
-                    operands = [o.strip().lstrip("%") for o in mm.group(1).split(",")]
-                    lhs_type = table.get(operands[0], "")
-                    lhs = _shape_dims(lhs_type)
+                    operands = _split_operands(mm.group(1))
+                    lhs = _shape_dims(_operand_type(operands[0], table))
                     contract = 1
                     if lhs:
                         for ci in (cdims.group(1).split(",") if cdims.group(1) else []):
@@ -229,8 +259,8 @@ def analyze_hlo(text: str, default_trip: int = 1) -> HLOStats:
                     mm = re.search(rf"{ckind}[\w\-]*\(([^)]*)\)", rhs)
                     op_bytes = 0
                     if mm:
-                        for o in mm.group(1).split(","):
-                            op_bytes += _shape_bytes(table.get(o.strip().lstrip("%"), ""))
+                        for o in _split_operands(mm.group(1)):
+                            op_bytes += _shape_bytes(_operand_type(o, table))
                     if ckind == "all-gather":
                         moved = nbytes
                     elif ckind == "all-reduce":
@@ -255,10 +285,10 @@ def analyze_hlo(text: str, default_trip: int = 1) -> HLOStats:
             mm = re.search(r"\(([^)]*)\)", rhs[rhs.find(op):])
             op_sizes = []
             if mm:
-                for o in mm.group(1).split(","):
-                    o = o.strip().lstrip("%")
-                    if o in table:
-                        op_sizes.append(_shape_bytes(table[o]))
+                for o in _split_operands(mm.group(1)):
+                    t = _operand_type(o, table)
+                    if t:
+                        op_sizes.append(_shape_bytes(t))
             if op in ("dynamic-update-slice", "scatter"):
                 upd = min([s for s in op_sizes if s > 0] or [res_bytes])
                 stats.hbm_bytes += 2 * upd * mult

@@ -1,0 +1,23 @@
+"""Device-resident synthesis engine.
+
+The execution layer that keeps an entire federated round — conditional
+batch draws, D/G train steps, and (at eval time) generator-output decode —
+on device:
+
+``DeviceSampler`` / ``SamplerTables``  — CTGAN's training-by-sampling
+    tables (cumulative log-frequency CDFs + CSR row index) as device
+    arrays, drawn with ``jax.random`` primitives; distribution-identical
+    to the host :class:`repro.gan.sampler.ConditionalSampler`.
+``RoundEngine``  — composes sampler draws with the jitted CTGAN train
+    steps inside a single ``lax.scan``, so whole client rounds run with
+    zero host round-trips between steps (the presampled-batch host pass
+    disappears from the training path).
+``synthesize_table``  — generator sampling + the fused one-dispatch
+    ``vgm_decode_table`` kernel: encoded rows to raw table in one kernel
+    dispatch instead of one op per column.
+"""
+from .sampler import DeviceSampler, SamplerTables, draw_batch, stack_sampler_tables
+from .engine import RoundEngine, synthesize_table
+
+__all__ = ["DeviceSampler", "SamplerTables", "draw_batch",
+           "stack_sampler_tables", "RoundEngine", "synthesize_table"]

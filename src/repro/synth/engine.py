@@ -1,0 +1,98 @@
+"""The device-resident federated round loop.
+
+``RoundEngine`` composes :func:`repro.synth.sampler.draw_batch` with the
+jitted CTGAN train steps inside one ``lax.scan``: a client's whole local
+round — E x (conditional batch draw + D step + G step) — lowers into a
+single XLA program with zero host transfers between steps.  The PR-1
+presampled path (``presample_rounds`` / ``make_round_batches``) staged
+every batch through numpy and shipped ``rounds x steps x batch x dim``
+arrays in; here only the model state and one PRNG key cross the boundary
+per round.
+
+``vmap`` over a stacked client axis (tables from
+:func:`stack_sampler_tables`) runs all clients "in parallel" exactly like
+the simulation drivers, and scanning over round keys runs many rounds in
+one dispatch (``run``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from ..gan.ctgan import CTGANConfig
+from ..gan.trainer import GANState, make_train_steps, sample_synthetic
+from ..tabular.encoders import SpanInfo, TableEncoders
+from .sampler import SamplerTables, draw_batch
+
+
+class RoundEngine:
+    """Jitted sampler-in-the-loop round runner for one table schema.
+
+    ``local_round`` is pure (state, tables, key) -> (state, metrics) and
+    deliberately un-jitted so callers can compose it — vmap it over a
+    client axis, wrap it with an aggregation step — inside their own jit.
+    ``run_round`` / ``run`` are the pre-jitted single-client entry points.
+    """
+
+    def __init__(self, cfg: CTGANConfig, spans: Sequence[SpanInfo],
+                 cond_spans: Sequence[SpanInfo], *, batch: int,
+                 local_steps: int, step_fn=None):
+        self.cfg = cfg
+        self.batch = int(batch)
+        self.local_steps = int(local_steps)
+        self.cond_dim = sum(s.width for s in cond_spans)
+        self.step_fn = step_fn or make_train_steps(cfg, tuple(spans),
+                                                   tuple(cond_spans))
+        self.run_round = jax.jit(self.local_round)
+        self._run_cache: dict[int, object] = {}
+
+    def local_round(self, state: GANState, tables: SamplerTables,
+                    key: jax.Array):
+        """E local steps under one lax.scan, batches drawn on device.
+
+        The round's E x batch conditional draws happen as ONE vectorized
+        ``draw_batch`` call at the top of the jitted round (draws are iid,
+        so this is distribution-identical to per-step draws and ~10%
+        faster on CPU — one threefry/gather pass instead of E), then the
+        scan consumes the (E, batch, ...) stack.  Still zero host
+        transfers: the draw lives inside the same XLA program as the
+        steps.  Returns (state, metrics with leading steps axis)."""
+        E = self.local_steps
+        big = draw_batch(tables, key, E * self.batch, self.cond_dim)
+        batches = jax.tree.map(
+            lambda a: a.reshape(E, self.batch, *a.shape[1:]), big)
+
+        def body(st, b):
+            return self.step_fn(st, b)
+        return jax.lax.scan(body, state, batches)
+
+    def run(self, state: GANState, tables: SamplerTables, key: jax.Array,
+            rounds: int):
+        """Many rounds in ONE dispatch: scan of local_round over round
+        keys.  Metrics come back stacked (rounds, steps)."""
+        fn = self._run_cache.get(rounds)
+        if fn is None:
+            def scanned(st, tb, k):
+                def body(s, rk):
+                    return self.local_round(s, tb, rk)
+                return jax.lax.scan(body, st, jax.random.split(k, rounds))
+            fn = self._run_cache[rounds] = jax.jit(scanned)
+        return fn(state, tables, key)
+
+
+def synthesize_table(g_params: dict, key: jax.Array, cfg: CTGANConfig,
+                     enc: TableEncoders, n_samples: int, *,
+                     hard: bool = True, use_pallas: bool | None = None,
+                     interpret: bool | None = None):
+    """Generator -> raw table through the fused synthesis path.
+
+    One jitted generator pass (``sample_synthetic``) plus ONE
+    ``vgm_decode_table`` kernel dispatch for all continuous columns (and
+    one vectorized categorical inverse pass) — instead of a per-column
+    decode loop.  Returns a (n_samples, Q) float64 numpy table.
+    """
+    encoded = sample_synthetic(g_params, key, cfg, tuple(enc.spans()),
+                               enc.cond_dim, n_samples, hard)
+    return enc.decode_plan().decode(encoded, use_pallas=use_pallas,
+                                    interpret=interpret)

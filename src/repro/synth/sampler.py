@@ -1,0 +1,122 @@
+"""Device-resident conditional sampler (CTGAN training-by-sampling).
+
+Moves :class:`repro.gan.sampler.ConditionalSampler`'s tables — the per-span
+cumulative log-frequency CDFs and the CSR row index — into device arrays
+(:class:`SamplerTables`, a pytree) and draws (cond, mask, real-row) batches
+with ``jax.random`` primitives.  The draw is the same inverse-CDF category
+pick + uniform CSR-bucket row pick as the host sampler, so the two are
+distribution-identical; because it is pure jnp it composes with ``jit``,
+``vmap`` (stacked clients) and ``lax.scan`` (whole rounds on device).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..gan.sampler import ConditionalSampler
+from ..tabular.encoders import TableEncoders
+
+
+class SamplerTables(NamedTuple):
+    """Device twin of the host sampler's index structures.
+
+    Shapes: ``encoded (N, D)``, ``cum/counts (n_spans, Cmax)``,
+    ``starts (n_spans, Cmax+1)``, ``order (n_spans, N)``,
+    ``widths/fallback/offsets (n_spans,)``.  Stacking a leading client
+    axis (see :func:`stack_sampler_tables`) keeps it vmap-ready.
+    """
+    encoded: jnp.ndarray
+    cum: jnp.ndarray
+    counts: jnp.ndarray
+    starts: jnp.ndarray
+    order: jnp.ndarray
+    widths: jnp.ndarray
+    fallback: jnp.ndarray
+    offsets: jnp.ndarray
+
+
+@partial(jax.jit, static_argnames=("batch", "cond_dim"))
+def draw_batch(tables: SamplerTables, key: jax.Array, batch: int,
+               cond_dim: int):
+    """One conditional batch, entirely on device.
+
+    Mirrors ``ConditionalSampler.sample`` step for step: uniform span
+    pick, inverse-CDF category pick from the cumulative log-frequency
+    table, uniform row pick within the (span, category) CSR bucket.
+    Returns (cond (B, cond_dim), mask (B, n_spans), real (B, D)).
+    """
+    n_spans = tables.cum.shape[0]
+    k_span, k_cat, k_row = jax.random.split(key, 3)
+    span_ids = jax.random.randint(k_span, (batch,), 0, n_spans)
+    u = jax.random.uniform(k_cat, (batch,))
+    c = jnp.sum(tables.cum[span_ids] < u[:, None], axis=1).astype(jnp.int32)
+    c = jnp.minimum(c, tables.widths[span_ids] - 1)
+    # guard empty category (possible on tiny client shards)
+    cnt = tables.counts[span_ids, c]
+    c = jnp.where(cnt == 0, tables.fallback[span_ids], c)
+    cnt = tables.counts[span_ids, c]
+    pos = (jax.random.uniform(k_row, (batch,)) * cnt).astype(jnp.int32)
+    pos = jnp.minimum(pos, jnp.maximum(cnt - 1, 0))
+    rows = tables.order[span_ids, tables.starts[span_ids, c] + pos]
+
+    # one-hots as broadcast compares, not scatters — ~1.6x faster on CPU
+    # XLA and the TPU-friendly form (scatter lowers poorly on both)
+    cond_pos = tables.offsets[span_ids] + c
+    cond = (jnp.arange(cond_dim)[None, :]
+            == cond_pos[:, None]).astype(jnp.float32)
+    mask = (jnp.arange(n_spans)[None, :]
+            == span_ids[:, None]).astype(jnp.float32)
+    return cond, mask, tables.encoded[rows]
+
+
+class DeviceSampler:
+    """Builds :class:`SamplerTables` from encoded rows + global encoders.
+
+    Reuses the host sampler's CSR construction (one numpy pass at init),
+    then every draw is device-side.  No internal RNG state: callers pass
+    explicit keys, which is what makes whole rounds scannable.
+    """
+
+    def __init__(self, encoded: np.ndarray, encoders: TableEncoders):
+        host = ConditionalSampler(np.asarray(encoded), encoders)
+        self.cond_dim = host.cond_dim
+        self.n_spans = host.n_spans
+        # the host sampler only defines _fallback for n_spans > 0 (empty
+        # schema); keep construction total like the host's __init__
+        fallback = getattr(host, "_fallback", np.zeros(0, np.int64))
+        self.tables = SamplerTables(
+            encoded=jnp.asarray(host.encoded, jnp.float32),
+            cum=jnp.asarray(host._cum, jnp.float32),
+            counts=jnp.asarray(host._counts, jnp.int32),
+            starts=jnp.asarray(host._starts, jnp.int32),
+            order=jnp.asarray(host._order, jnp.int32),
+            widths=jnp.asarray(host._widths, jnp.int32),
+            fallback=jnp.asarray(fallback, jnp.int32),
+            offsets=jnp.asarray(host._span_offsets[:-1], jnp.int32))
+
+    def sample(self, key: jax.Array, batch: int):
+        """(cond, mask, real) — device arrays, jit-cached per batch size."""
+        return draw_batch(self.tables, key, batch, self.cond_dim)
+
+
+def stack_sampler_tables(samplers: list[DeviceSampler]) -> SamplerTables:
+    """Stack per-client tables into a leading client axis for vmapped
+    federated rounds.  Clients with fewer rows are zero-padded to the
+    largest N — padded rows are unreachable (the CSR starts/counts only
+    address real rows), so draws are unaffected."""
+    n_max = max(int(s.tables.encoded.shape[0]) for s in samplers)
+
+    def pad(t: SamplerTables) -> SamplerTables:
+        n = int(t.encoded.shape[0])
+        if n == n_max:
+            return t
+        return t._replace(
+            encoded=jnp.pad(t.encoded, ((0, n_max - n), (0, 0))),
+            order=jnp.pad(t.order, ((0, 0), (0, n_max - n))))
+
+    padded = [pad(s.tables) for s in samplers]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *padded)

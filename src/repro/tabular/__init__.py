@@ -1,8 +1,9 @@
-from .encoders import (ColumnSpec, EncodePlan, LabelEncoder, SpanInfo,
-                       TableEncoders, fit_centralized_encoders,
-                       make_encode_plan)
+from .encoders import (ColumnSpec, DecodePlan, EncodePlan, LabelEncoder,
+                       SpanInfo, TableEncoders, fit_centralized_encoders,
+                       make_decode_plan, make_encode_plan)
 from .vgm import (VGMParams, fit_vgm, sample_vgm, encode_column,
-                  decode_column, pack_vgm_params, kernel_log_weights)
+                  decode_column, pack_vgm_params, kernel_log_weights,
+                  merge_client_vgms, merge_client_vgms_table)
 from .datasets import (TabularDataset, make_dataset, partition_full_copy,
                        partition_quantity_skew, partition_malicious,
                        partition_label_skew)

@@ -17,6 +17,17 @@ Two encode paths exist:
     for all categoricals, and a single static gather into the final row
     layout.  Both paths draw per-column Gumbel noise from the same
     ``jax.random.split(key, Q)`` streams, so they are bit-identical.
+
+Decode mirrors this:
+
+``TableEncoders.decode_loop``  — per-column inversion (one jitted
+    ``decode_column`` per continuous column, a host argmax per
+    categorical).
+``TableEncoders.decode``       — the fused path via :class:`DecodePlan`:
+    one static gather into the packed slot layout, ONE table-wide
+    ``kernels.ops.vgm_decode_table`` dispatch for all continuous columns,
+    and one vectorized argmax/inverse-lookup pass for all categoricals.
+    Bit-identical to the loop path.
 """
 from __future__ import annotations
 
@@ -28,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .vgm import VGMParams, decode_column, fit_vgm, pack_vgm_params
+from .vgm import (NEG_INF, VGMParams, decode_column, fit_vgm,
+                  pack_vgm_params)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,8 +164,26 @@ class TableEncoders:
                                             self.label_encoders[j].n))
         return jnp.concatenate(parts, axis=1)
 
-    def decode(self, encoded: jnp.ndarray) -> np.ndarray:
-        """(N, encoded_dim) activations -> (N, Q) raw table."""
+    def decode_plan(self) -> "DecodePlan":
+        """The fused one-dispatch decode plan (built once, then cached)."""
+        p = getattr(self, "_decode_plan", None)
+        if p is None:
+            p = make_decode_plan(self)
+            self._decode_plan = p
+        return p
+
+    def decode(self, encoded: jnp.ndarray, *,
+               use_pallas: bool | None = None,
+               interpret: bool | None = None) -> np.ndarray:
+        """(N, encoded_dim) activations -> (N, Q) raw table, fused
+        single-dispatch path (see :class:`DecodePlan`)."""
+        return self.decode_plan().decode(encoded, use_pallas=use_pallas,
+                                         interpret=interpret)
+
+    def decode_loop(self, encoded: jnp.ndarray) -> np.ndarray:
+        """Per-column reference inversion (one ``decode_column`` dispatch
+        per continuous column).  Kept as the oracle for :meth:`decode`;
+        the two are bit-identical."""
         cols = []
         spans = self.spans()
         i = 0
@@ -304,6 +334,118 @@ def make_encode_plan(enc: TableEncoders) -> EncodePlan:
                       means=means, stds=stds, logw=logw,
                       _cat_ranks=cat_ranks, _draw_gumbel=draw_gumbel,
                       _assemble=assemble)
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    """Precompiled table-wide decode — the inverse of :class:`EncodePlan`.
+
+    Derived once from a :class:`TableEncoders`, every subsequent decode is
+
+        1 jitted extract (static gather of the encoded row into the packed
+          ``(Q_cont, 1+Kmax)`` slot layout with -inf beta padding, plus a
+          vectorized argmax over all categorical spans)
+      + 1 fused ``vgm_decode_table`` kernel dispatch (ALL continuous cols)
+      + 1 vectorized host inverse-lookup for the categorical raw ids
+
+    instead of one ``decode_column`` dispatch + host argmax per column."""
+    schema: list[ColumnSpec]
+    cont_cols: tuple[int, ...]         # schema indices, continuous
+    cat_cols: tuple[int, ...]          # schema indices, categorical
+    kmax: int
+    means: jnp.ndarray                 # (Q_cont, Kmax) packed
+    stds: jnp.ndarray                  # (Q_cont, Kmax)
+    _extract: Callable                 # (encoded) -> (slots, cat_ranks)
+    _cat_inverse: Callable             # (ranks np) -> (n, Q_cat) raw float64
+
+    def decode(self, encoded: jnp.ndarray, *,
+               use_pallas: bool | None = None,
+               interpret: bool | None = None,
+               block_n: int | None = None) -> np.ndarray:
+        from ..kernels import ops
+        encoded = jnp.asarray(encoded)
+        n = encoded.shape[0]
+        slots, ranks = self._extract(encoded)
+        out = np.empty((n, len(self.schema)), np.float64)
+        if self.cont_cols:
+            x = ops.vgm_decode_table(slots, self.means, self.stds,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret, block_n=block_n)
+            out[:, list(self.cont_cols)] = np.asarray(x)
+        if self.cat_cols:
+            out[:, list(self.cat_cols)] = self._cat_inverse(np.asarray(ranks))
+        return out
+
+
+def make_decode_plan(enc: TableEncoders) -> DecodePlan:
+    """Build the fused decode plan from fitted per-column encoders."""
+    schema = enc.schema
+    cont_cols = tuple(j for j, c in enumerate(schema) if c.kind == "continuous")
+    cat_cols = tuple(j for j, c in enumerate(schema) if c.kind == "categorical")
+    vgms = [enc.vgms[j] for j in cont_cols]
+    col_modes = [int(p.means.shape[0]) for p in vgms]
+    kmax = max(col_modes, default=0)
+    slot = 1 + kmax
+    if cont_cols:
+        means, stds, _ = pack_vgm_params(vgms, kmax)
+    else:
+        means = stds = jnp.zeros((0, 0), jnp.float32)
+
+    # slot-layout gather: slot position -> encoded position (or -inf pad)
+    spans = enc.spans()
+    alpha_start = {s.column: s.start for s in spans if s.activation == "tanh"}
+    span_of = {s.column: s for s in spans if s.activation == "softmax"}
+    src = np.zeros(len(cont_cols) * slot, np.int32)
+    pad = np.zeros(len(cont_cols) * slot, bool)
+    for q, j in enumerate(cont_cols):
+        base = q * slot
+        src[base] = alpha_start[j]
+        k = col_modes[q]
+        beta = span_of[j]
+        src[base + 1:base + 1 + k] = beta.start + np.arange(k)
+        pad[base + 1 + k:base + slot] = True
+
+    # categorical argmax gather: (Q_cat, Cmax) encoded positions + pad mask
+    cat_widths = [enc.label_encoders[j].n for j in cat_cols]
+    cmax = max(cat_widths, default=0)
+    cat_src = np.zeros((len(cat_cols), cmax), np.int32)
+    cat_pad = np.zeros((len(cat_cols), cmax), bool)
+    for q, j in enumerate(cat_cols):
+        w = cat_widths[q]
+        cat_src[q, :w] = span_of[j].start + np.arange(w)
+        cat_pad[q, w:] = True
+
+    src_j = jnp.asarray(src)
+    pad_j = jnp.asarray(pad)
+    cat_src_j = jnp.asarray(cat_src)
+    cat_pad_j = jnp.asarray(cat_pad)
+    n_cat = len(cat_cols)
+
+    @jax.jit
+    def extract(encoded: jnp.ndarray):
+        enc_f = encoded.astype(jnp.float32)
+        slots = jnp.where(pad_j[None, :], NEG_INF,
+                          jnp.take(enc_f, src_j, axis=1))
+        if n_cat:
+            seg = jnp.take(enc_f, cat_src_j.reshape(-1), axis=1)
+            seg = seg.reshape(encoded.shape[0], n_cat, cmax)
+            seg = jnp.where(cat_pad_j[None], NEG_INF, seg)
+            ranks = jnp.argmax(seg, axis=2).astype(jnp.int32)
+        else:
+            ranks = jnp.zeros((encoded.shape[0], 0), jnp.int32)
+        return slots, ranks
+
+    # padded raw-id table for one vectorized inverse lookup on host
+    cat_table = np.zeros((len(cat_cols), cmax), np.float64)
+    for q, j in enumerate(cat_cols):
+        cat_table[q, :cat_widths[q]] = enc.label_encoders[j].categories
+
+    def cat_inverse(ranks: np.ndarray) -> np.ndarray:
+        return cat_table[np.arange(n_cat)[None, :], ranks]
+
+    return DecodePlan(schema=list(schema), cont_cols=cont_cols,
+                      cat_cols=cat_cols, kmax=kmax, means=means, stds=stds,
+                      _extract=extract, _cat_inverse=cat_inverse)
 
 
 def fit_centralized_encoders(table: np.ndarray, schema: Sequence[ColumnSpec],

@@ -176,10 +176,12 @@ def decode_column(alpha: jnp.ndarray, beta: jnp.ndarray,
 def merge_client_vgms(client_params: list[VGMParams], client_rows: list[int],
                       key: jax.Array, *, max_modes: int = 10,
                       samples_cap: int = 20_000) -> VGMParams:
-    """Federator-side global VGM fit (Fed-TGAN §4.1 step 1, continuous).
+    """Federator-side global VGM fit (Fed-TGAN §4.1 step 1, continuous),
+    ONE column at a time.
 
     Bootstraps ``N_i``-proportional samples from every client's local VGM and
     refits a single global VGM on the union — never touching client data.
+    Kept as the per-column oracle for :func:`merge_client_vgms_table`.
     """
     total = sum(client_rows)
     keys = jax.random.split(key, len(client_params) + 1)
@@ -189,3 +191,43 @@ def merge_client_vgms(client_params: list[VGMParams], client_rows: list[int],
         parts.append(sample_vgm(p, k, n_draw))
     data = jnp.concatenate(parts)
     return fit_vgm(data, keys[-1], max_modes=max_modes)
+
+
+def merge_client_vgms_table(client_params: Sequence[Sequence[VGMParams]],
+                            client_rows: Sequence[int], keys: jnp.ndarray, *,
+                            max_modes: int = 10,
+                            samples_cap: int = 20_000) -> VGMParams:
+    """Vmapped federator merge: ALL continuous columns in one pass.
+
+    Reuses the packed ``(Q, K)`` layout idea from the fused kernels:
+    per-client params stack into ``(Q, P, K)`` arrays and the
+    bootstrap-sample + refit pipeline of :func:`merge_client_vgms` vmaps
+    over the column axis instead of looping in Python.  ``client_params``
+    is indexed ``[client][column]`` and every entry must share the same
+    ``K`` (callers group columns by ``max_modes``); ``keys`` carries one
+    per-column PRNG key, so each column sees EXACTLY the same randoms as
+    the per-column loop — the two paths are bit-identical.
+
+    Returns a :class:`VGMParams` pytree with a leading column axis.
+    """
+    P = len(client_params)
+    Q = len(client_params[0])
+    total = sum(client_rows)
+    n_draws = [max(1, int(round(samples_cap * n_i / max(total, 1))))
+               for n_i in client_rows]
+
+    def pack(f):                                      # (Q, P, K)
+        return jnp.stack([jnp.stack([f(client_params[i][q])
+                                     for i in range(P)]) for q in range(Q)])
+    weights = pack(lambda p: p.weights)
+    means = pack(lambda p: p.means)
+    stds = pack(lambda p: p.stds)
+    valid = pack(lambda p: p.valid)
+
+    def merge_one(w_pk, m_pk, s_pk, v_pk, key):
+        ks = jax.random.split(key, P + 1)
+        parts = [sample_vgm(VGMParams(w_pk[i], m_pk[i], s_pk[i], v_pk[i]),
+                            ks[i], n_draws[i]) for i in range(P)]
+        return fit_vgm(jnp.concatenate(parts), ks[P], max_modes=max_modes)
+
+    return jax.vmap(merge_one)(weights, means, stds, valid, keys)

@@ -1,0 +1,273 @@
+"""Device-resident synthesis engine: fused decode parity, device sampler
+distribution parity, the vmapped federator merge, and the RoundEngine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.gan.ctgan import CTGANConfig
+from repro.gan.sampler import ConditionalSampler
+from repro.gan.trainer import init_gan_state, sample_synthetic
+from repro.kernels import ops, ref
+from repro.kernels.vgm_decode import vgm_decode_table
+from repro.synth import (DeviceSampler, RoundEngine, draw_batch,
+                         stack_sampler_tables, synthesize_table)
+from repro.tabular import make_dataset, fit_centralized_encoders
+from repro.tabular.vgm import (NEG_INF, VGMParams, decode_column,
+                               merge_client_vgms, merge_client_vgms_table)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _packed_decode_inputs(key, N, Q, kmax, ks):
+    """Random packed slots + params; column q has ks[q] live modes."""
+    km, ks2, ka, kb = jax.random.split(key, 4)
+    live = jnp.arange(kmax)[None, :] < jnp.asarray(ks)[:, None]
+    means = jnp.where(live, jax.random.normal(km, (Q, kmax)) * 3.0, 0.0)
+    stds = jnp.where(live, jnp.abs(jax.random.normal(ks2, (Q, kmax))) + 0.3,
+                     1.0)
+    alpha = jnp.tanh(jax.random.normal(ka, (N, Q)))
+    beta = jnp.where(live[None], jax.random.uniform(kb, (N, Q, kmax)),
+                     NEG_INF)
+    slots = jnp.concatenate([alpha[:, :, None], beta],
+                            axis=2).reshape(N, Q * (1 + kmax))
+    return slots, means, stds, alpha, beta, live
+
+
+class TestVgmDecodeTableKernel:
+    @pytest.mark.parametrize("N,Q,kmax,block_n", [
+        (512, 4, 10, 256),
+        (777, 3, 8, 256),          # row-padding path
+        (300, 1, 10, 128),         # single column
+    ])
+    def test_matches_table_ref(self, key, N, Q, kmax, block_n):
+        ks = [kmax - (q % 3) for q in range(Q)]
+        slots, means, stds, _, _, _ = _packed_decode_inputs(
+            jax.random.fold_in(key, 31), N, Q, kmax, ks)
+        out = vgm_decode_table(slots, means, stds, block_n=block_n,
+                               interpret=True)
+        expect = jax.jit(ref.vgm_decode_table_ref)(slots, means, stds)
+        assert out.shape == (N, Q)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_matches_per_column_decode(self, key):
+        """The fused kernel must agree bit-for-bit with the per-column
+        ``decode_column`` oracle on the unpacked spans."""
+        N, Q, kmax = 400, 5, 10
+        ks = [10, 7, 3, 10, 5]
+        slots, means, stds, alpha, beta, live = _packed_decode_inputs(
+            jax.random.fold_in(key, 32), N, Q, kmax, ks)
+        out = vgm_decode_table(slots, means, stds, block_n=128,
+                               interpret=True)
+        for q in range(Q):
+            p = VGMParams(jnp.ones(kmax) / kmax, means[q], stds[q], live[q])
+            expect = decode_column(alpha[:, q], beta[:, q], p)
+            np.testing.assert_array_equal(np.asarray(out[:, q]),
+                                          np.asarray(expect))
+
+    def test_padded_modes_never_selected(self, key):
+        """Decoded values must come from live modes only: every output
+        lies inside its selected live mode's [mu-4s, mu+4s] envelope."""
+        N, Q, kmax = 600, 3, 9
+        ks = [4, 2, 6]
+        slots, means, stds, _, beta, live = _packed_decode_inputs(
+            jax.random.fold_in(key, 33), N, Q, kmax, ks)
+        out = np.asarray(jax.jit(ref.vgm_decode_table_ref)(slots, means, stds))
+        comp = np.asarray(jnp.argmax(beta, axis=2))
+        for q, k in enumerate(ks):
+            assert comp[:, q].max() < k, f"column {q} selected a padded mode"
+            mu = np.asarray(means)[q, comp[:, q]]
+            sd = np.asarray(stds)[q, comp[:, q]]
+            assert np.all(np.abs(out[:, q] - mu) <= 4.0 * sd + 1e-5)
+
+    def test_ops_wrapper_routes_agree(self, key):
+        N, Q, kmax = 256, 2, 6
+        slots, means, stds, _, _, _ = _packed_decode_inputs(
+            jax.random.fold_in(key, 34), N, Q, kmax, [6, 4])
+        a = ops.vgm_decode_table(slots, means, stds, use_pallas=False)
+        b = ops.vgm_decode_table(slots, means, stds, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ds = make_dataset("adult", n_rows=1000, seed=5)
+    key = jax.random.PRNGKey(5)
+    enc = fit_centralized_encoders(ds.data, ds.schema, key)
+    encoded = np.asarray(enc.encode(ds.data, jax.random.fold_in(key, 1)))
+    return ds, enc, encoded, key
+
+
+class TestDecodePlan:
+    def test_roundtrip_bit_matches_loop(self, fitted):
+        """Encode -> fused decode == encode -> per-column decode_loop, on
+        BOTH kernel routes (jnp ref and Pallas interpret)."""
+        ds, enc, encoded, key = fitted
+        loop = enc.decode_loop(jnp.asarray(encoded))
+        np.testing.assert_array_equal(enc.decode(encoded, use_pallas=False),
+                                      loop)
+        np.testing.assert_array_equal(enc.decode(encoded, interpret=True),
+                                      loop)
+
+    def test_categoricals_roundtrip_exactly(self, fitted):
+        ds, enc, encoded, key = fitted
+        dec = enc.decode(encoded)
+        for j, col in enumerate(ds.schema):
+            if col.kind == "categorical":
+                np.testing.assert_array_equal(dec[:, j], ds.data[:, j])
+
+    def test_single_kernel_dispatch(self, fitted):
+        ds, enc, encoded, key = fitted
+        ops.DISPATCH_COUNTS.clear()
+        enc.decode(encoded, interpret=True)
+        assert ops.DISPATCH_COUNTS["vgm_decode_table"] == 1
+        ops.DISPATCH_COUNTS.clear()
+        enc.decode(encoded)        # auto route off-TPU -> jitted ref, still 1
+        total = (ops.DISPATCH_COUNTS["vgm_decode_table"]
+                 + ops.DISPATCH_COUNTS["vgm_decode_table_ref"])
+        assert total == 1
+        ops.DISPATCH_COUNTS.clear()
+
+
+class TestDeviceSampler:
+    def test_batch_invariants(self, fitted):
+        ds, enc, encoded, key = fitted
+        s = DeviceSampler(encoded, enc)
+        host = ConditionalSampler(encoded, enc)
+        cond, mask, real = map(np.asarray, s.sample(key, 256))
+        assert cond.shape == (256, s.cond_dim)
+        assert mask.shape == (256, s.n_spans)
+        assert np.all(cond.sum(axis=1) == 1.0)
+        assert np.all(mask.sum(axis=1) == 1.0)
+        # the fetched real row must carry the conditioned category
+        for i in range(0, 256, 17):
+            si = int(mask[i].argmax())
+            sp = host.spans[si]
+            c = cond[i, host._span_offsets[si]:host._span_offsets[si + 1]].argmax()
+            assert real[i, sp.start:sp.start + sp.width].argmax() == c
+
+    def test_chi_squared_matches_host_distribution(self, fitted):
+        """Device draws reproduce the host sampler's log-frequency
+        category marginals: chi-squared against the analytic target
+        (aggregated over spans — a 4-sigma bound per span would flake at
+        the ~1% level by construction), plus a per-span frequency
+        comparison to host-sampler draws."""
+        ds, enc, encoded, key = fitted
+        s = DeviceSampler(encoded, enc)
+        host = ConditionalSampler(encoded, enc, seed=11)
+        n = 60_000
+        cond_d, mask_d, _ = map(np.asarray,
+                                s.sample(jax.random.fold_in(key, 3), n))
+        cond_h, mask_h, _ = host.sample(n)
+        assert np.abs(mask_d.mean(0) - 1.0 / s.n_spans).max() < 0.01
+        chi2_total, dof_total = 0.0, 0
+        for si in range(s.n_spans):
+            lo, hi = host._span_offsets[si], host._span_offsets[si + 1]
+            obs = cond_d[mask_d[:, si] == 1.0, lo:hi].sum(0)
+            n_si = obs.sum()
+            exp = host.cat_logfreq[si] * n_si
+            keep = exp >= 5          # standard chi-squared validity floor
+            chi2_total += float(((obs[keep] - exp[keep]) ** 2 / exp[keep]).sum())
+            dof_total += max(int(keep.sum()) - 1, 1)
+            # the two samplers' frequencies agree with each other
+            ph = cond_h[mask_h[:, si] == 1.0, lo:hi].mean(0)
+            np.testing.assert_allclose(obs / max(n_si, 1.0), ph, atol=0.035)
+        # ~p>0.9999 bound: mean + 4 sigma of a chi2_dof variate.  A broken
+        # sampler (wrong CDF, off-by-one category) lands orders of
+        # magnitude above this at n=60k.
+        assert chi2_total < dof_total + 4.0 * np.sqrt(2.0 * dof_total), \
+            (chi2_total, dof_total)
+
+    def test_stacked_tables_pad_safely(self, fitted):
+        """Clients with different row counts stack; padded rows are never
+        drawn (every returned row matches a real encoded row)."""
+        ds, enc, encoded, key = fitted
+        s1 = DeviceSampler(encoded[:300], enc)
+        s2 = DeviceSampler(encoded, enc)
+        tabs = stack_sampler_tables([s1, s2])
+        assert tabs.encoded.shape[0] == 2
+        keys = jax.random.split(key, 2)
+        cond, mask, real = jax.vmap(
+            lambda tb, k: draw_batch(tb, k, 128, s1.cond_dim))(tabs, keys)
+        real1 = np.asarray(real[0])
+        small = encoded[:300]
+        # rows drawn for the padded client all come from its real rows
+        matches = (real1[:, None, :] == small[None, :, :]).all(axis=2).any(axis=1)
+        assert matches.all()
+
+
+class TestRoundEngine:
+    @pytest.fixture(scope="class")
+    def engine_setup(self, fitted):
+        ds, enc, encoded, key = fitted
+        cfg = CTGANConfig(batch_size=40, gen_hidden=(32, 32),
+                          disc_hidden=(32, 32), pac=4, z_dim=16)
+        spans, cond_spans = tuple(enc.spans()), tuple(enc.condition_spans())
+        engine = RoundEngine(cfg, spans, cond_spans, batch=40, local_steps=3)
+        state = init_gan_state(jax.random.fold_in(key, 8), cfg, enc.cond_dim,
+                               enc.encoded_dim)
+        sampler = DeviceSampler(encoded, enc)
+        return cfg, enc, engine, state, sampler
+
+    def test_round_is_one_scan_no_host_staging(self, engine_setup, fitted):
+        cfg, enc, engine, state, sampler = engine_setup
+        ds, _, _, key = fitted
+        st, metrics = engine.run_round(state, sampler.tables,
+                                       jax.random.fold_in(key, 9))
+        assert int(st.step) == 3                   # E steps ran
+        assert metrics["d_loss"].shape == (3,)
+        assert all(np.isfinite(np.asarray(v)).all() for v in metrics.values())
+
+    def test_multi_round_scan(self, engine_setup, fitted):
+        cfg, enc, engine, state, sampler = engine_setup
+        ds, _, _, key = fitted
+        st, metrics = engine.run(state, sampler.tables,
+                                 jax.random.fold_in(key, 10), rounds=2)
+        assert int(st.step) == 6
+        assert metrics["g_loss"].shape == (2, 3)
+
+    def test_synthesize_one_decode_dispatch(self, engine_setup, fitted):
+        """The fused synthesis path issues exactly ONE decode kernel
+        dispatch for the whole table."""
+        cfg, enc, engine, state, sampler = engine_setup
+        ds, _, _, key = fitted
+        ops.DISPATCH_COUNTS.clear()
+        raw = synthesize_table(state.g_params, jax.random.fold_in(key, 12),
+                               cfg, enc, 64, interpret=True)
+        assert ops.DISPATCH_COUNTS["vgm_decode_table"] == 1
+        ops.DISPATCH_COUNTS.clear()
+        assert raw.shape == (64, len(ds.schema))
+        # synthesized categoricals land on the global label support
+        for j, col in enumerate(ds.schema):
+            if col.kind == "categorical":
+                assert np.isin(raw[:, j],
+                               enc.label_encoders[j].categories).all()
+
+
+class TestVmappedFederatorMerge:
+    def test_bit_matches_per_column_loop(self, fitted):
+        """The packed vmapped §4.1 merge reproduces the per-column
+        ``merge_client_vgms`` EXACTLY (same per-column keys)."""
+        ds, enc, encoded, key = fitted
+        from repro.core.encoding import compute_client_stats
+        parts = [ds.data[:400], ds.data[400:]]
+        stats = [compute_client_stats(d, ds.schema, jax.random.fold_in(key, i))
+                 for i, d in enumerate(parts)]
+        n_rows = [s.n_rows for s in stats]
+        keys = jax.random.split(key, len(ds.schema))
+        cont = [j for j, c in enumerate(ds.schema) if c.kind == "continuous"]
+        merged = merge_client_vgms_table(
+            [[s.vgms[j] for j in cont] for s in stats], n_rows,
+            jnp.stack([keys[j] for j in cont]))
+        for q, j in enumerate(cont):
+            expect = merge_client_vgms([s.vgms[j] for s in stats], n_rows,
+                                       keys[j])
+            got = jax.tree.map(lambda x, q=q: x[q], merged)
+            np.testing.assert_array_equal(np.asarray(got.weights),
+                                          np.asarray(expect.weights))
+            np.testing.assert_array_equal(np.asarray(got.means),
+                                          np.asarray(expect.means))
+            np.testing.assert_array_equal(np.asarray(got.stds),
+                                          np.asarray(expect.stds))
+            np.testing.assert_array_equal(np.asarray(got.valid),
+                                          np.asarray(expect.valid))
