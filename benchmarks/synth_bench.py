@@ -1,11 +1,16 @@
 """Device-resident synthesis engine benchmarks.
 
-Two comparisons on the paper-scale 40k x 30 mixed table:
+Three comparisons on the paper-scale 40k x 30 mixed table:
 
   decode — generator-output inversion through the per-column
       ``decode_loop`` (one ``decode_column`` dispatch + host argmax per
       column) vs the fused ``DecodePlan`` (one ``vgm_decode_table``
       kernel dispatch for ALL continuous columns).
+
+  activations — the generator head through the per-span
+      ``apply_activations`` loop (~2 dispatches per span: a slice +
+      a softmax) vs the fused ``segment_activations`` kernel (ONE
+      dispatch for the whole encoded row layout).
 
   round loop — the PR-1 presampled client round (host
       ``presample_rounds`` + staged batch transfer + jitted scan, one
@@ -14,7 +19,7 @@ Two comparisons on the paper-scale 40k x 30 mixed table:
       zero host round-trips between steps).
 
 CPU wall times plus the roofline-PROJECTED TPU v5e time for the fused
-decode kernel, same convention as encode_bench.
+kernels, same convention as encode_bench.
 """
 from __future__ import annotations
 
@@ -24,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.gan.ctgan import CTGANConfig
+from repro.gan.ctgan import (CTGANConfig, apply_activations,
+                             apply_activations_fused)
 from repro.gan.sampler import ConditionalSampler
 from repro.gan.trainer import init_gan_state, local_train_scan, make_train_steps
 from repro.kernels import ops
@@ -88,6 +94,51 @@ def bench_decode(N: int = 40_000, Q: int = 30) -> dict:
     return {"N": N, "Q": Q, "q_cont": q_cont, "us_loop": us_loop,
             "us_fused": us_fused, "us_fused_interpret": us_fused_k,
             "dispatches": {"loop": q_cont, "fused": fused_disp},
+            "tpu_roofline_us": proj}
+
+
+def bench_activations(N: int = 40_000, Q: int = 30) -> dict:
+    """Generator-head activations: per-span loop vs fused kernel."""
+    from repro.kernels.segment_activations import build_span_layout
+
+    table, schema = _mixed_table(N, Q)
+    key = jax.random.PRNGKey(0)
+    enc = fit_centralized_encoders(table, schema, key)
+    spans = tuple(enc.spans())
+    layout = build_span_layout(spans)
+    logits = jax.random.normal(jax.random.fold_in(key, 1),
+                               (N, enc.encoded_dim), jnp.float32)
+    ka = jax.random.fold_in(key, 2)
+
+    loop_fn = jax.jit(lambda l: apply_activations(l, spans, ka, 0.2))
+    fused_fn = jax.jit(lambda l: apply_activations_fused(
+        l, spans, ka, 0.2, use_pallas=False))
+    us_loop, us_fused = _time_interleaved(
+        [lambda: loop_fn(logits), lambda: fused_fn(logits)], iters=6)
+    us_fused_k = _time(lambda: apply_activations_fused(
+        logits, spans, ka, 0.2, interpret=True))
+
+    ops.DISPATCH_COUNTS.clear()
+    jax.jit(lambda l: apply_activations_fused(
+        l, spans, ka, 0.2, use_pallas=False))(logits)
+    fused_disp = ops.DISPATCH_COUNTS["segment_activations_ref"]
+    ops.DISPATCH_COUNTS.clear()
+
+    # roofline: packed logits + uniforms in, packed activations out
+    S, W = len(spans), layout.wmax
+    hbm = 3 * N * S * W * 4
+    proj = hbm / HBM_BW * 1e6
+
+    emit(f"act/loop_N{N}_S{S}", us_loop,
+         f"per_span_ops={2 * S}")
+    emit(f"act/fused_N{N}_S{S}", us_fused,
+         f"kernel_dispatches={fused_disp};speedup={us_loop / us_fused:.2f}x;"
+         f"tpu_roofline_us={proj:.1f}")
+    emit(f"act/fused_interpret_N{N}_S{S}", us_fused_k, "backend=pallas")
+    assert fused_disp == 1
+    return {"N": N, "Q": Q, "spans": S, "wmax": W, "us_loop": us_loop,
+            "us_fused": us_fused, "us_fused_interpret": us_fused_k,
+            "dispatches": {"loop_per_span_ops": 2 * S, "fused": fused_disp},
             "tpu_roofline_us": proj}
 
 
@@ -164,4 +215,5 @@ def run_all():
     # the process.
     out = {"round_loop": bench_round_loop()}
     out["decode"] = bench_decode()
+    out["activations"] = bench_activations()
     return out

@@ -206,7 +206,7 @@ def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
         """One global step: every client D trains on central-G fakes; G
         updates from the average of per-client generator losses.  Client
         batches are drawn on device (no host staging)."""
-        from ..gan.ctgan import (apply_activations, conditional_loss,
+        from ..gan.ctgan import (apply_activations_fused, conditional_loss,
                                  discriminator_forward, generator_forward,
                                  gradient_penalty)
         from ..optim import adam
@@ -220,7 +220,7 @@ def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
         def d_loss_one(d_params, cond, real, k):
             kz, ka, k1, k2, kgp = jax.random.split(k, 5)
             z = jax.random.normal(kz, (real.shape[0], cfg.z_dim))
-            fake = apply_activations(
+            fake = apply_activations_fused(
                 generator_forward(g_params, z, cond, n_hidden), spans, ka, cfg.tau)
             fi = jnp.concatenate([fake, cond], 1)
             ri = jnp.concatenate([real, cond], 1)
@@ -243,7 +243,7 @@ def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
                 kz, ka, kdd = jax.random.split(kk, 3)
                 z = jax.random.normal(kz, (cond.shape[0], cfg.z_dim))
                 logits = generator_forward(gp, z, cond, n_hidden)
-                fake = apply_activations(logits, spans, ka, cfg.tau)
+                fake = apply_activations_fused(logits, spans, ka, cfg.tau)
                 fi = jnp.concatenate([fake, cond], 1)
                 yf = discriminator_forward(d_params, fi, kdd, cfg)
                 return -jnp.mean(yf) + conditional_loss(logits, cond, mask,

@@ -1,3 +1,3 @@
-from .ctgan import CTGANConfig
+from .ctgan import CTGANConfig, apply_activations, apply_activations_fused
 from .sampler import ConditionalSampler
 from .trainer import GANState, init_gan_state, make_train_steps, sample_synthetic

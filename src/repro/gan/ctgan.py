@@ -17,6 +17,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ref import GUMBEL_EPS
 from ..tabular.encoders import SpanInfo
 
 
@@ -98,7 +99,12 @@ def generator_forward(params: dict, z: jnp.ndarray, cond: jnp.ndarray,
 def apply_activations(logits: jnp.ndarray, spans: Sequence[SpanInfo],
                       key: jax.Array, tau: float,
                       hard: bool = False) -> jnp.ndarray:
-    """Per-span tanh / Gumbel-softmax (straight-through when ``hard``)."""
+    """Per-span tanh / Gumbel-softmax (straight-through when ``hard``).
+
+    The per-span oracle loop (~2 dispatches per span).  The hot paths use
+    :func:`apply_activations_fused` — one kernel dispatch for the whole
+    row layout, bit-identical values and matching gradients.
+    """
     parts = []
     keys = jax.random.split(key, len(spans))
     for s, k in zip(spans, keys):
@@ -106,13 +112,34 @@ def apply_activations(logits: jnp.ndarray, spans: Sequence[SpanInfo],
         if s.activation == "tanh":
             parts.append(jnp.tanh(seg))
         else:
-            g = -jnp.log(-jnp.log(jax.random.uniform(k, seg.shape) + 1e-20) + 1e-20)
+            g = -jnp.log(-jnp.log(jax.random.uniform(k, seg.shape)
+                                  + GUMBEL_EPS) + GUMBEL_EPS)
             y = jax.nn.softmax((seg + g) / tau, axis=1)
             if hard:
                 y_hard = jax.nn.one_hot(jnp.argmax(y, axis=1), s.width)
-                y = y_hard + jax.lax.stop_gradient(y) - y  # ST estimator
+                # ST estimator: forward y_hard, backward the soft grad
+                y = y_hard - jax.lax.stop_gradient(y) + y
             parts.append(y)
     return jnp.concatenate(parts, axis=1)
+
+
+def apply_activations_fused(logits: jnp.ndarray, spans: Sequence[SpanInfo],
+                            key: jax.Array, tau: float, hard: bool = False,
+                            *, use_pallas: bool | None = None,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Fused drop-in for :func:`apply_activations`: ALL spans in ONE
+    ``kernels.ops.segment_activations`` dispatch (same per-span key
+    streams, so values are bit-identical to the loop; the custom VJP
+    matches its gradients, ST estimator included).
+
+    The fused path computes and returns float32 — the encoded row
+    layout's dtype everywhere in this repo.  Callers feeding wider
+    logits (e.g. under x64) should not expect dtype preservation.
+    """
+    from ..kernels import ops
+    return ops.segment_activations(logits, spans, key, tau, hard=hard,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
 
 
 def discriminator_forward(params: dict, x: jnp.ndarray, key: jax.Array,

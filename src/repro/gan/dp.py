@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from ..optim import adam
 from ..tabular.encoders import SpanInfo
-from .ctgan import (CTGANConfig, apply_activations, conditional_loss,
+from .ctgan import (CTGANConfig, apply_activations_fused, conditional_loss,
                     discriminator_forward, generator_forward,
                     gradient_penalty)
 from .trainer import GANState
@@ -69,7 +69,7 @@ def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         kz, ka, kd = jax.random.split(key, 3)
         z = jax.random.normal(kz, (cond.shape[0], cfg.z_dim))
         logits = generator_forward(g_params, z, cond, n_hidden)
-        fake = apply_activations(logits, spans, ka, cfg.tau)
+        fake = apply_activations_fused(logits, spans, ka, cfg.tau)
         fake_in = jnp.concatenate([fake, cond], axis=1)
         y_fake = discriminator_forward(d_params, fake_in, kd, cfg)
         return -jnp.mean(y_fake) + conditional_loss(logits, cond, mask,
@@ -84,7 +84,7 @@ def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         # one shared fake batch (public: generated), packed like the real
         z = jax.random.normal(kz, (B, cfg.z_dim))
         logits = generator_forward(state.g_params, z, cond, n_hidden)
-        fake = apply_activations(logits, spans, ka, cfg.tau)
+        fake = apply_activations_fused(logits, spans, ka, cfg.tau)
         fake_in = jnp.concatenate([fake, cond], axis=1)
 
         packs_real = real.reshape(n_packs, pac, -1)

@@ -23,7 +23,7 @@ import numpy as np
 
 from ..optim import adam
 from ..tabular.encoders import SpanInfo
-from .ctgan import (CTGANConfig, apply_activations, conditional_loss,
+from .ctgan import (CTGANConfig, apply_activations_fused, conditional_loss,
                     discriminator_forward, generator_forward,
                     gradient_penalty, init_discriminator, init_generator)
 
@@ -61,7 +61,7 @@ def make_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         kz, ka, kd1, kd2, kgp = jax.random.split(key, 5)
         z = jax.random.normal(kz, (real.shape[0], cfg.z_dim))
         logits = generator_forward(g_params, z, cond, n_hidden)
-        fake = apply_activations(logits, spans, ka, cfg.tau)
+        fake = apply_activations_fused(logits, spans, ka, cfg.tau)
         fake_in = jnp.concatenate([fake, cond], axis=1)
         real_in = jnp.concatenate([real, cond], axis=1)
         y_fake = discriminator_forward(d_params, fake_in, kd1, cfg)
@@ -74,7 +74,7 @@ def make_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         kz, ka, kd = jax.random.split(key, 3)
         z = jax.random.normal(kz, (cond.shape[0], cfg.z_dim))
         logits = generator_forward(g_params, z, cond, n_hidden)
-        fake = apply_activations(logits, spans, ka, cfg.tau)
+        fake = apply_activations_fused(logits, spans, ka, cfg.tau)
         fake_in = jnp.concatenate([fake, cond], axis=1)
         y_fake = discriminator_forward(d_params, fake_in, kd, cfg)
         ce = conditional_loss(logits, cond, mask, cond_spans)
@@ -119,14 +119,18 @@ def local_train_scan(step_fn, state: GANState, round_batches):
     return jax.lax.scan(body, state, round_batches)
 
 
-@partial(jax.jit, static_argnames=("cfg", "spans", "cond_dim", "n_samples", "hard"))
+@partial(jax.jit, static_argnames=("cfg", "spans", "cond_dim", "n_samples",
+                                   "hard", "use_pallas", "interpret"))
 def sample_synthetic(g_params: dict, key: jax.Array, cfg: CTGANConfig,
                      spans: tuple, cond_dim: int, n_samples: int,
-                     hard: bool = True) -> jnp.ndarray:
+                     hard: bool = True, use_pallas: bool | None = None,
+                     interpret: bool | None = None) -> jnp.ndarray:
     """Draw synthetic encoded rows (cond vector zeroed, as in CTGAN's
-    unconditional sampling mode)."""
+    unconditional sampling mode).  Generator forward + fused whole-row
+    activations in one jitted program — zero per-span dispatches."""
     kz, ka = jax.random.split(key)
     z = jax.random.normal(kz, (n_samples, cfg.z_dim))
     cond = jnp.zeros((n_samples, cond_dim))
     logits = generator_forward(g_params, z, cond, len(cfg.gen_hidden))
-    return apply_activations(logits, spans, ka, cfg.tau, hard=hard)
+    return apply_activations_fused(logits, spans, ka, cfg.tau, hard=hard,
+                                   use_pallas=use_pallas, interpret=interpret)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .mlstm_chunk import mlstm_chunk as _mlstm_chunk
+from .segment_activations import (build_span_layout,
+                                  segment_activations_packed)
 from .vgm_decode import vgm_decode_table as _vgm_decode_table
 from .vgm_encode import vgm_encode as _vgm_encode
 from .vgm_encode import vgm_encode_table as _vgm_encode_table
@@ -109,6 +111,53 @@ def vgm_decode_table(slots, means, stds, *, use_pallas=None, interpret=None,
         block_n = max(int(slots.shape[0]), 1) if interp else 1024
     return _vgm_decode_table(slots, means, stds, block_n=block_n,
                              interpret=interp)
+
+
+def segment_activations(logits, spans, key, tau, hard=False, *,
+                        use_pallas=None, interpret=None, block_n=None):
+    """Drop-in for gan.ctgan.apply_activations: tanh + Gumbel-softmax over
+    the whole encoded row layout in ONE kernel dispatch instead of ~2 per
+    span.  Differentiable (custom VJP matches ``jax.grad`` through the
+    per-span loop, ST estimator included).
+
+    The per-span uniforms are drawn here from the SAME
+    ``jax.random.split(key, len(spans))`` streams as the loop — span i
+    draws with key i at shape (N, w_i), padded to Wmax — so kernel, ref,
+    and loop see identical randoms and agree bit-for-bit on values.
+
+    ``use_pallas=None`` auto-routes like :func:`vgm_encode_table`, and
+    ``block_n=None`` picks the same row tile policy (1024 on TPU, the
+    whole batch in interpret mode)."""
+    layout = build_span_layout(tuple(spans))
+    n = logits.shape[0]
+    keys = jax.random.split(key, len(layout.spans))
+    us = []
+    for i, s in enumerate(layout.spans):
+        if s.activation == "tanh":
+            us.append(jnp.full((n, layout.wmax), 0.5, jnp.float32))
+        else:
+            u = jax.random.uniform(keys[i], (n, s.width), jnp.float32)
+            us.append(jnp.pad(u, ((0, 0), (0, layout.wmax - s.width)),
+                              constant_values=0.5))
+    packed_u = jnp.concatenate(us, axis=1)
+    packed_x = jnp.where(layout.pack_pad[None, :], -jnp.inf,
+                         jnp.take(logits.astype(jnp.float32),
+                                  layout.pack_src, axis=1))
+    tau, hard = float(tau), bool(hard)
+    if use_pallas is None:
+        use_pallas = _ON_TPU or interpret is not None
+    if not use_pallas:
+        DISPATCH_COUNTS["segment_activations_ref"] += 1
+        out = segment_activations_packed(packed_x, packed_u, layout.kinds,
+                                         tau, hard, False, False, 0)
+    else:
+        DISPATCH_COUNTS["segment_activations"] += 1
+        interp = (not _ON_TPU) if interpret is None else interpret
+        if block_n is None:
+            block_n = max(int(n), 1) if interp else 1024
+        out = segment_activations_packed(packed_x, packed_u, layout.kinds,
+                                         tau, hard, True, interp, block_n)
+    return jnp.take(out, layout.unpack_src, axis=1)
 
 
 def mlstm_chunk(q, k, v, log_f, log_i, *, use_pallas=True, interpret=None,

@@ -12,6 +12,11 @@ import jax.numpy as jnp
 
 NEG_INF = -1e30
 
+# Gumbel-noise epsilon shared by the per-span activation loop
+# (gan.ctgan.apply_activations), this oracle, and the fused Pallas kernel
+# (kernels.segment_activations) — one constant so parity can be bit-exact.
+GUMBEL_EPS = 1e-20
+
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   causal: bool = True, window: int | None = None) -> jnp.ndarray:
@@ -98,6 +103,32 @@ def vgm_decode_table_ref(slots: jnp.ndarray, means: jnp.ndarray,
     mu = means[cols, comp]
     sd = stds[cols, comp]
     return jnp.clip(alpha, -1.0, 1.0) * 4.0 * sd + mu
+
+
+def segment_activations_ref(packed_x: jnp.ndarray, packed_u: jnp.ndarray,
+                            kinds: jnp.ndarray, tau: float,
+                            hard: bool = False) -> jnp.ndarray:
+    """Oracle for the fused segment-activation kernel.
+
+    packed_x: (N, S*W) logits in span-slot layout (-inf padded lanes);
+    packed_u: (N, S*W) per-span uniform draws (padded lanes in (0, 1));
+    kinds: (S, W) rows of 1.0 for tanh spans.  Returns packed activations
+    (N, S*W).  Uses ``jax.nn.softmax`` and the loop's exact Gumbel / ST
+    expressions so value AND autodiff parity with
+    ``gan.ctgan.apply_activations`` hold on live lanes.
+    """
+    N = packed_x.shape[0]
+    S, W = kinds.shape
+    x = packed_x.reshape(N, S, W).astype(jnp.float32)
+    u = packed_u.reshape(N, S, W).astype(jnp.float32)
+    g = -jnp.log(-jnp.log(u + GUMBEL_EPS) + GUMBEL_EPS)
+    y = jax.nn.softmax((x + g) / tau, axis=2)
+    if hard:
+        y_hard = jax.nn.one_hot(jnp.argmax(y, axis=2), W, dtype=jnp.float32)
+        # ST estimator: forward y_hard, backward the soft grad
+        y = y_hard - jax.lax.stop_gradient(y) + y
+    out = jnp.where(kinds[None] > 0.5, jnp.tanh(x), y)
+    return out.reshape(N, S * W)
 
 
 def mlstm_chunk_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

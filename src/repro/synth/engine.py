@@ -87,12 +87,15 @@ def synthesize_table(g_params: dict, key: jax.Array, cfg: CTGANConfig,
                      interpret: bool | None = None):
     """Generator -> raw table through the fused synthesis path.
 
-    One jitted generator pass (``sample_synthetic``) plus ONE
-    ``vgm_decode_table`` kernel dispatch for all continuous columns (and
-    one vectorized categorical inverse pass) — instead of a per-column
-    decode loop.  Returns a (n_samples, Q) float64 numpy table.
+    One jitted program for generator forward + whole-row activations
+    (``sample_synthetic`` with ONE ``segment_activations`` dispatch
+    instead of ~2 per span) plus ONE ``vgm_decode_table`` kernel dispatch
+    for all continuous columns (and one vectorized categorical inverse
+    pass).  Zero per-span/per-column dispatches end to end.  Returns a
+    (n_samples, Q) float64 numpy table.
     """
     encoded = sample_synthetic(g_params, key, cfg, tuple(enc.spans()),
-                               enc.cond_dim, n_samples, hard)
+                               enc.cond_dim, n_samples, hard,
+                               use_pallas, interpret)
     return enc.decode_plan().decode(encoded, use_pallas=use_pallas,
                                     interpret=interpret)
