@@ -1,59 +1,42 @@
-"""End-to-end serving driver: batched prefill + decode on an assigned
-architecture (the deliverable-(b) end-to-end example — serves a small
-model with batched requests through the production decode path: KV ring
-caches, GQA decode, per-arch block stacks).
+"""End-to-end serving example: batched LLM decode, or streaming tabular
+synthesis through the ``repro.serve`` subsystem.
 
-``--tabular`` switches to the paper's own serving workload: batched
-synthetic-row requests answered through the device-resident synthesis
-engine — a short federated warm-up with sampler-in-the-loop rounds
-(repro.synth.RoundEngine), then every request is one generator pass plus
-ONE fused ``vgm_decode_table`` kernel dispatch for the whole table.
+Default mode serves a small language model with batched requests through
+the production decode path (KV ring caches, GQA decode, per-arch block
+stacks).
 
-Run:  PYTHONPATH=src python examples/serve_batched.py [--arch smollm-135m]
-      PYTHONPATH=src python examples/serve_batched.py --tabular
+``--tabular`` switches to the paper's own serving workload: a short
+federated warm-up trains a CTGAN (sampler-in-the-loop rounds via
+``repro.synth.RoundEngine``), the table is registered with the streaming
+server (``repro.serve.StreamingSynthesizer``), and a mixed-size request
+trace drains through the bucketed, double-buffered pipeline — one fused
+``vgm_decode_table`` kernel dispatch per request and zero recompiles
+after warmup (see docs/SERVING.md).
+
+Run:
+  PYTHONPATH=src python examples/serve_batched.py [--arch smollm-135m]
+      [--batch 4] [--prompt-len 16] [--gen 12]
+  PYTHONPATH=src python examples/serve_batched.py --tabular
+      [--requests 16] [--sizes 100,256,777] [--rounds 4] [--conditional]
+
+Flags accepted with ``--tabular``:
+  --requests N      trace length (default 16)
+  --sizes A,B,...   request row counts, cycled over the trace
+                    (default 100,256,777; the bucket ladder is fitted to
+                    this set, so any mix serves without recompiles)
+  --rounds R        federated warm-up rounds before serving (default 4)
+  --conditional     draw each request's condition vectors from the
+                    table's training-by-sampling marginals instead of
+                    zeroing them (CTGAN's real sampling mode)
+The LLM flags (--arch/--batch/--prompt-len/--gen) are ignored in
+``--tabular`` mode, and vice versa.
 """
 import argparse
 import sys
-import time
 sys.path.insert(0, "src")
 
 from repro.configs import ARCH_NAMES, get_smoke_config
-from repro.launch.serve import prefill_and_decode
-
-
-def serve_tabular(requests: int, rows_per_request: int) -> None:
-    import jax
-    from repro.core.architectures import run_federated
-    from repro.gan.ctgan import CTGANConfig
-    from repro.kernels import ops
-    from repro.synth import synthesize_table
-    from repro.tabular import make_dataset, partition_quantity_skew
-
-    ds = make_dataset("adult", n_rows=1500, seed=0)
-    parts = partition_quantity_skew(ds, n_clients=3, small_rows=200)
-    cfg = CTGANConfig(batch_size=100, gen_hidden=(128, 128),
-                      disc_hidden=(128, 128), pac=10, z_dim=64)
-    print(f"warm-up: 4 federated rounds on {ds.name} "
-          f"({ds.n_rows} rows, {len(ds.schema)} cols)")
-    res = run_federated(parts, ds.schema, cfg=cfg, rounds=4, local_steps=2)
-
-    key = jax.random.PRNGKey(7)
-    synthesize_table(res.final_g_params, key, cfg, res.encoders,
-                     rows_per_request)              # compile once
-    ops.DISPATCH_COUNTS.clear()
-    t0 = time.perf_counter()
-    for r in range(requests):
-        synthesize_table(res.final_g_params, jax.random.fold_in(key, r),
-                         cfg, res.encoders, rows_per_request)
-    dt = time.perf_counter() - t0
-    disp = sum(v for k, v in ops.DISPATCH_COUNTS.items()
-               if k.startswith("vgm_decode_table"))
-    rows = requests * rows_per_request
-    print(f"served {requests} requests x {rows_per_request} rows in "
-          f"{dt:.2f}s ({rows / dt:.0f} rows/s) — "
-          f"{disp} decode kernel dispatches "
-          f"({disp // requests} per request, was "
-          f"{sum(c.kind == 'continuous' for c in ds.schema)} per-column)")
+from repro.launch.serve import prefill_and_decode, run_tabular_server
 
 
 def main():
@@ -63,14 +46,26 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--tabular", action="store_true",
-                    help="serve batched tabular synthesis requests through "
-                         "the fused decode path instead of an LLM")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--rows", type=int, default=1024)
+                    help="serve streaming tabular synthesis requests "
+                         "through the bucketed fused pipeline instead of "
+                         "an LLM")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="[tabular] trace length")
+    ap.add_argument("--sizes", default="100,256,777",
+                    help="[tabular] comma list of request row counts, "
+                         "cycled over the trace")
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="[tabular] federated warm-up rounds")
+    ap.add_argument("--conditional", action="store_true",
+                    help="[tabular] condition vectors from the table's "
+                         "sampler marginals")
     args = ap.parse_args()
 
     if args.tabular:
-        serve_tabular(args.requests, args.rows)
+        run_tabular_server(
+            requests=args.requests,
+            sizes=tuple(int(s) for s in args.sizes.split(",")),
+            rounds=args.rounds, conditional=args.conditional)
         return
 
     cfg = get_smoke_config(args.arch)

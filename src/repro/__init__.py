@@ -1,0 +1,13 @@
+"""Fed-TGAN reproduction: federated tabular-GAN training, fused Pallas
+device pipeline, and the streaming synthesis serving layer.
+
+Subpackage map (details in docs/ARCHITECTURE.md):
+
+``tabular``  — schemas, VGM encoders, fused Encode/Decode plans
+``gan``      — CTGAN model, losses, jitted train steps
+``kernels``  — Pallas kernels + jnp oracles behind ``kernels.ops``
+``synth``    — device-resident sampler + round engine + synthesis
+``serve``    — streaming multi-tenant synthesis serving
+``core``     — federated protocol (§4.1 init, §4.2 weighting, merges)
+``launch``   — CLI drivers (train, serve, dryrun, roofline)
+"""

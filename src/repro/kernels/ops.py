@@ -7,6 +7,7 @@ call site can be flipped for A/B testing.
 from __future__ import annotations
 
 import collections
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,40 @@ _vgm_decode_table_ref = jax.jit(ref.vgm_decode_table_ref)
 # to prove the fused encode path issues ONE dispatch where the per-column
 # loop issues Q_cont.  Reset with ``DISPATCH_COUNTS.clear()``.
 DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+@contextlib.contextmanager
+def dispatch_scope():
+    """Attribute kernel dispatches to one code region without resetting
+    the global counter.
+
+    Benchmarks own the whole process and may ``DISPATCH_COUNTS.clear()``;
+    the serving path cannot — several requests (and the warm-up trainer)
+    interleave on one counter.  The scope yields a ``Counter`` that is
+    filled with this region's dispatch deltas on exit:
+
+        with ops.dispatch_scope() as d:
+            plan.decode(encoded)
+        assert stage_dispatches(d, "vgm_decode_table") == 1
+    """
+    before = DISPATCH_COUNTS.copy()
+    scoped: collections.Counter = collections.Counter()
+    try:
+        yield scoped
+    finally:
+        for k, v in DISPATCH_COUNTS.items():
+            delta = v - before.get(k, 0)
+            if delta:
+                scoped[k] = delta
+
+
+def stage_dispatches(counts, stage: str) -> int:
+    """Total dispatches for one pipeline stage, summed across backend
+    routes (``<stage>`` Pallas + ``<stage>_ref`` jnp oracle), so callers
+    assert the one-dispatch-per-stage contract independently of where
+    the auto-routing sent the call."""
+    return sum(v for k, v in counts.items() if k == stage or
+               k == stage + "_ref")
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

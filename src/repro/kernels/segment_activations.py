@@ -20,6 +20,31 @@ mass and the hard argmax can never select them — and the grid tiles
 ``jax.custom_vjp`` whose backward replays the oracle's VJP, so the
 straight-through estimator's gradients match the per-span loop on both
 routes (the Pallas forward alone would be opaque to autodiff).
+
+Example — one tanh alpha span + one 3-wide one-hot span, applied through
+the :func:`repro.kernels.ops.segment_activations` wrapper (which draws
+the per-span uniforms and packs/unpacks the ``(S, Wmax)`` layout):
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.kernels import ops
+    >>> from repro.tabular.encoders import SpanInfo
+    >>> spans = (SpanInfo(0, 1, "tanh", 0, False),
+    ...          SpanInfo(1, 3, "softmax", 0, True))
+    >>> logits = jnp.array([[0.0, 2.0, -1.0, 0.5]])
+    >>> out = ops.segment_activations(logits, spans, jax.random.PRNGKey(0),
+    ...                               0.2, hard=True, use_pallas=False)
+    >>> out.shape
+    (1, 4)
+    >>> float(out[0, 0])                    # tanh span: tanh(0.0)
+    0.0
+    >>> sorted(out[0, 1:].tolist())         # hard draw: a valid one-hot
+    [0.0, 0.0, 1.0]
+
+The one-hot span went through Gumbel-softmax at tau=0.2 with the
+straight-through ``hard`` estimator: the forward value is exactly
+one-hot, while gradients flow through the soft sample.  Padded lanes
+(spans narrower than Wmax) carry ``-inf`` logits, take exactly zero
+softmax mass, and can never be the argmax.
 """
 from __future__ import annotations
 

@@ -9,6 +9,24 @@ inverted — argmax mode select + mode-specific denormalization
 one ``decode_column`` dispatch per column.  Grid tiles ``(row_block,
 column)`` exactly like the encode kernel, so on TPU both directions of the
 synthesis pipeline are a single Mosaic program each.
+
+Example — one column with two modes; the ``-inf`` beta lane can never win
+the argmax, so each row denormalizes against its selected live mode:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.kernels.vgm_decode import vgm_decode_table
+    >>> from repro.tabular.vgm import NEG_INF
+    >>> means = jnp.array([[0.0, 10.0]])                 # (Q=1, Kmax=2)
+    >>> stds = jnp.array([[1.0, 2.0]])
+    >>> slots = jnp.array([[0.5, NEG_INF, 0.0],          # argmax -> mode 1
+    ...                    [-0.25, 0.0, NEG_INF]])       # argmax -> mode 0
+    >>> vgm_decode_table(slots, means, stds, block_n=2,
+    ...                  interpret=True).tolist()
+    [[14.0], [-1.0]]
+
+Row 0 inverts ``alpha * 4 * sigma_1 + mu_1 = 0.5 * 4 * 2 + 10``; row 1
+``-0.25 * 4 * 1 + 0``.  This is bit-identical to the per-column
+``tabular.vgm.decode_column`` oracle (same clip/multiply order).
 """
 from __future__ import annotations
 

@@ -22,6 +22,29 @@ Two kernels live here:
                         disappears — a single static gather (fused into the
                         caller's jit) maps slots to the final CTGAN row
                         layout.
+
+Example — two continuous columns with two modes each, packed ``(Q, Kmax)``
+params.  Zero Gumbel noise makes the likeliest mode win deterministically,
+and a value AT a mode mean normalizes to alpha = 0:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.kernels.vgm_encode import vgm_encode_table
+    >>> means = jnp.array([[-1.0, 1.0], [0.0, 5.0]])     # (Q=2, Kmax=2)
+    >>> stds = jnp.ones((2, 2))
+    >>> logw = jnp.zeros((2, 2))
+    >>> x = jnp.array([[-1.0, 5.0], [1.0, 0.0]])         # (N=2, Q=2)
+    >>> g = jnp.zeros((2, 4))                            # (N, Q*Kmax)
+    >>> slots = vgm_encode_table(x, means, stds, logw, g, block_n=2,
+    ...                          interpret=True)
+    >>> slots.shape                                      # (N, Q*(1+Kmax))
+    (2, 6)
+    >>> slots[0].tolist()    # row 0: [alpha_0, beta_0..] [alpha_1, beta_1..]
+    [0.0, 1.0, 0.0, 0.0, 0.0, 1.0]
+
+Column 0 of row 0 sits at mode 0's mean (-1.0) and column 1 at mode 1's
+mean (5.0): both alphas are 0 and the betas one-hot the winning mode.
+Columns with fewer than Kmax real modes pad ``log_weights`` with ``-inf``
+(see ``tabular.vgm.pack_vgm_params``), which zeroes their win probability.
 """
 from __future__ import annotations
 

@@ -1,0 +1,27 @@
+"""Streaming synthesis serving subsystem.
+
+The delivery layer Fed-TGAN trains FOR: once a generator is federated,
+synthetic tables get handed out to consumers, and this package turns the
+one-shot :func:`repro.synth.synthesize_table` path into a multi-tenant
+streaming server —
+
+``BucketLadder``          — static padded-size buckets; each bucket is one
+    XLA compile, so mixed-size traces never recompile after warmup.
+``TableRegistry``         — per-schema resident state (generator params,
+    fused ``DecodePlan``, optional ``SamplerTables`` marginals) for
+    several tables served at once.
+``StreamingSynthesizer``  — request queue + bucket aggregation + a
+    double-buffered generate->decode pipeline with jit-cache-hit and
+    kernel-dispatch accounting built in.
+
+See docs/SERVING.md for the operational tour and docs/ARCHITECTURE.md
+for how this composes with the fused device pipeline underneath.
+"""
+from .bucketing import (BucketLadder, RequestTooLarge, default_ladder,
+                        ladder_from_sizes)
+from .registry import TableEntry, TableRegistry
+from .server import StreamingSynthesizer, SynthesisRequest, SynthesisResponse
+
+__all__ = ["BucketLadder", "RequestTooLarge", "default_ladder",
+           "ladder_from_sizes", "TableEntry", "TableRegistry",
+           "StreamingSynthesizer", "SynthesisRequest", "SynthesisResponse"]

@@ -1,0 +1,81 @@
+"""Static bucket ladder: the serving layer's recompile protection.
+
+Every distinct row count a jitted synthesis program sees is a fresh XLA
+compile (``n_samples`` is a static argument all the way down: the z draw,
+the generator batch-norm, the fused activation/decode kernels all shape-
+specialize on it).  A production trace with free-form request sizes would
+therefore recompile continuously.  The ladder quantizes: each request is
+assigned the smallest configured bucket that fits, the generator runs at
+bucket size with the request's own key, and the response is the first
+``rows`` rows — so the ladder is the COMPLETE set of shapes the server
+can ever execute, and each compiles exactly once (verified by the
+server's jit-cache counter).
+
+Because the CTGAN generator batch-normalizes over the batch axis, values
+depend on the batch size they were generated at.  The serving contract is
+therefore defined at bucket granularity: a request ``(key, rows)`` is
+answered with ``synthesize_table(..., key, n_samples=bucket)[:rows]``,
+bit-identical to that unbatched oracle (requests whose ``rows`` is itself
+a bucket size match ``synthesize_table(..., rows)`` exactly).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Sequence
+
+
+class RequestTooLarge(ValueError):
+    """Request rows exceed the ladder's top bucket (split the request or
+    register the table with a taller ladder)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """Sorted, static set of batch sizes the server may execute."""
+    buckets: tuple[int, ...]
+
+    def __post_init__(self):
+        b = tuple(sorted(int(x) for x in self.buckets))
+        if not b or b[0] <= 0:
+            raise ValueError(f"ladder needs positive buckets, got {b}")
+        if len(set(b)) != len(b):
+            raise ValueError(f"duplicate buckets: {b}")
+        object.__setattr__(self, "buckets", b)
+
+    @property
+    def max_rows(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, rows: int) -> int:
+        """Smallest bucket >= rows (raises :class:`RequestTooLarge` past
+        the top — never a silent new shape)."""
+        if rows <= 0:
+            raise ValueError(f"rows must be positive, got {rows}")
+        i = bisect.bisect_left(self.buckets, rows)
+        if i == len(self.buckets):
+            raise RequestTooLarge(
+                f"{rows} rows > max bucket {self.max_rows}")
+        return self.buckets[i]
+
+
+def default_ladder(max_rows: int = 4096, min_bucket: int = 64) -> BucketLadder:
+    """Powers-of-two ladder ``min_bucket..>=max_rows``: log2(max/min)+1
+    compiles cover every request size up to the cap with <2x row padding."""
+    if max_rows < min_bucket:
+        return BucketLadder((min_bucket,))
+    sizes, b = [], int(min_bucket)
+    while b < max_rows:
+        sizes.append(b)
+        b *= 2
+    sizes.append(b)
+    return BucketLadder(tuple(sizes))
+
+
+def ladder_from_sizes(sizes: Sequence[int], *,
+                      min_bucket: int = 64) -> BucketLadder:
+    """Fit a ladder to an expected trace: one power-of-two bucket per
+    distinct size class actually observed (dropping rungs no size maps
+    to), so cold-start compiles only cover shapes the trace needs."""
+    full = default_ladder(max(sizes), min_bucket)
+    return BucketLadder(tuple(sorted({full.bucket_for(s) for s in sizes})))

@@ -1,0 +1,97 @@
+"""Multi-tenant table registry: per-schema device state for serving.
+
+One :class:`TableEntry` per registered table schema holds everything a
+request needs resident on device — generator params, the fused
+:class:`~repro.tabular.encoders.DecodePlan`, optional
+:class:`~repro.synth.SamplerTables` for conditional sampling — plus the
+static pieces the jit cache keys on (span tuples, config, bucket ladder).
+Several schemas stay registered at once; the synthesis programs they
+compile never collide because the span tuples/config are static jit
+arguments, so each tenant owns its own cache entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..gan.ctgan import CTGANConfig
+from ..synth.sampler import DeviceSampler, SamplerTables
+from ..tabular.encoders import DecodePlan, TableEncoders
+from .bucketing import BucketLadder, default_ladder
+
+
+@dataclasses.dataclass
+class TableEntry:
+    """Everything resident for one served table schema."""
+    name: str
+    cfg: CTGANConfig
+    encoders: TableEncoders
+    g_params: dict
+    ladder: BucketLadder
+    decode_plan: DecodePlan
+    spans: tuple                       # static: jit cache key component
+    cond_dim: int
+    tables: SamplerTables | None       # conditional-mode marginals
+    uid: int = -1                      # registration identity: updating a
+                                       # model means unregister(name) then
+                                       # register(name, ...) again, which
+                                       # yields a fresh uid, so server
+                                       # warm-sets never go stale
+    served_rows: int = 0
+    served_requests: int = 0
+
+    @property
+    def n_columns(self) -> int:
+        return len(self.encoders.schema)
+
+
+class TableRegistry:
+    """Name -> :class:`TableEntry` map the server draws tenants from."""
+
+    def __init__(self):
+        self._entries: dict[str, TableEntry] = {}
+        self._next_uid = 0
+
+    def register(self, name: str, cfg: CTGANConfig, encoders: TableEncoders,
+                 g_params: dict, *, ladder: BucketLadder | None = None,
+                 tables: SamplerTables | None = None,
+                 encoded: np.ndarray | None = None) -> TableEntry:
+        """Make a table servable.  Builds the fused encode/decode plans
+        NOW (``prepare_plans``) so plan construction never lands inside a
+        request's latency.  Conditional sampling needs marginals: pass
+        prebuilt ``tables`` or raw ``encoded`` rows to derive them from
+        (neither -> the tenant serves unconditional requests only)."""
+        if name in self._entries:
+            raise ValueError(f"table {name!r} already registered")
+        decode_plan = encoders.prepare_plans()
+        if tables is None and encoded is not None:
+            tables = DeviceSampler(np.asarray(encoded), encoders).tables
+        entry = TableEntry(
+            name=name, cfg=cfg, encoders=encoders, g_params=g_params,
+            ladder=ladder or default_ladder(), decode_plan=decode_plan,
+            spans=tuple(encoders.spans()), cond_dim=encoders.cond_dim,
+            tables=tables, uid=self._next_uid)
+        self._next_uid += 1
+        self._entries[name] = entry
+        return entry
+
+    def get(self, name: str) -> TableEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown table {name!r}; registered: "
+                           f"{sorted(self._entries)}") from None
+
+    def unregister(self, name: str) -> None:
+        self.get(name)
+        del self._entries[name]
+
+    def names(self) -> list[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -1,0 +1,289 @@
+"""Streaming synthesis server: queue -> buckets -> overlapped pipeline.
+
+``StreamingSynthesizer`` turns the one-shot :func:`repro.synth.synthesize_table`
+path into a serving loop:
+
+* **Request queue + bucket aggregation.**  ``submit`` enqueues
+  ``(table, rows, key)`` requests; at serve time each is assigned the
+  smallest rung of its table's static :class:`~repro.serve.bucketing.BucketLadder`
+  that fits.  All requests in a bucket share ONE compiled synthesis
+  program, so a mixed-size trace executes against a fixed, small set of
+  XLA executables — zero recompiles after warmup, which the server
+  *measures* (jit-cache growth per request) rather than assumes.
+
+  Requests are NOT merged into a single device batch: the CTGAN generator
+  batch-normalizes over the batch axis, so row values depend on the batch
+  they were generated in, and any cross-request merge (or row padding
+  inside one program) would break bit-identity with the per-request
+  oracle.  The contract is per-request at bucket granularity: a request
+  is answered with ``synthesize_table(g, key, cfg, enc, bucket)[:rows]``.
+
+* **Double buffering.**  Generation is dispatched asynchronously (JAX
+  async dispatch): while request *i*'s fused decode + host slice runs,
+  request *i+1*'s generator pass is already executing on device, so the
+  decode stage hides under the generate stage instead of serializing.
+
+* **Multi-tenant.**  Entries come from a
+  :class:`~repro.serve.registry.TableRegistry`; interleaved requests for
+  different schemas hit different jit cache entries (spans/config are
+  static arguments) and different resident :class:`DecodePlan`s.
+
+* **Dispatch accounting.**  Every response records its fused-decode
+  kernel dispatches via :func:`repro.kernels.ops.dispatch_scope` — the
+  one-dispatch-per-request contract is part of the server's stats, not
+  just a benchmark-time assertion.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from ..gan.trainer import sample_synthetic
+from ..kernels import ops
+from ..synth.engine import sample_synthetic_conditional
+from .registry import TableEntry, TableRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthesisRequest:
+    """One table-synthesis request.  ``key`` is the request's PRNG
+    identity: resubmitting the same (table, rows, key, hard, conditional)
+    returns bit-identical rows."""
+    rid: int
+    table: str
+    rows: int
+    key: jax.Array
+    hard: bool = True
+    conditional: bool = False
+
+
+@dataclasses.dataclass
+class SynthesisResponse:
+    rid: int
+    table: str
+    rows: int
+    bucket: int
+    data: np.ndarray                   # (rows, Q) float64 raw table
+    decode_dispatches: int             # fused decode kernels this request
+    cache_hit: bool                    # generate ran without a compile
+
+
+@dataclasses.dataclass
+class _Pending:
+    """In-flight request: generation dispatched, decode not yet run."""
+    req: SynthesisRequest
+    entry: TableEntry
+    bucket: int
+    encoded: jax.Array
+    cache_before: int                  # jit cache size when generate began
+
+
+class StreamingSynthesizer:
+    """The serving loop over a :class:`TableRegistry`.
+
+    >>> # doctest-style sketch; see docs/SERVING.md for a runnable tour
+    >>> # server = StreamingSynthesizer(registry)
+    >>> # server.warmup()
+    >>> # server.submit("adult", rows=700)
+    >>> # [resp] = server.serve()
+    """
+
+    def __init__(self, registry: TableRegistry, *,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None, pipeline: bool = True):
+        self.registry = registry
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.pipeline = pipeline
+        # each queued request carries the TableEntry it was validated
+        # against: registry mutations between submit and serve cannot
+        # re-route or crash an accepted request
+        self._queue: collections.deque[tuple[SynthesisRequest, TableEntry]] \
+            = collections.deque()
+        # keyed by registration uid, not name: unregistering and then
+        # re-registering a name (the model-update lifecycle) yields a
+        # fresh uid, so the new programs re-warm
+        self._warmed: set[tuple[int, int, bool, bool]] = set()
+        self._next_rid = 0
+        self.warmup_compiles = 0
+        self.serving_compiles = 0
+        self.cache_hits = 0
+        self.decode_dispatch_counts: list[int] = []
+
+    # ---- queue -------------------------------------------------------
+    def submit(self, table: str, rows: int, *, key: jax.Array | None = None,
+               seed: int | None = None, hard: bool = True,
+               conditional: bool = False) -> int:
+        """Enqueue a request; returns its id.  Validates table + bucket
+        NOW so oversized/unknown requests fail at submit, not mid-drain."""
+        entry = self.registry.get(table)
+        entry.ladder.bucket_for(rows)              # raises RequestTooLarge
+        if conditional and entry.tables is None:
+            raise ValueError(f"table {table!r} registered without sampler "
+                             "tables: conditional serving unavailable")
+        rid = self._next_rid
+        self._next_rid += 1
+        if key is None:
+            key = jax.random.PRNGKey(rid if seed is None else seed)
+        self._queue.append((SynthesisRequest(rid, table, int(rows), key,
+                                             hard, conditional), entry))
+        return rid
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # ---- compile accounting ------------------------------------------
+    def _cache_size(self) -> int:
+        """Total live executables across every jitted stage a request can
+        touch: the two generate entry points plus each tenant's decode
+        extract.  Growth during a request == a recompile."""
+        n = (sample_synthetic._cache_size()
+             + sample_synthetic_conditional._cache_size())
+        for name in self.registry.names():
+            n += self.registry.get(name).decode_plan._extract._cache_size()
+        return n
+
+    # ---- pipeline stages ---------------------------------------------
+    def _generate(self, req: SynthesisRequest,
+                  entry: TableEntry) -> _Pending:
+        """Stage 1 (device, async): generator + fused activations at
+        bucket size.  Returns immediately — the arrays are futures."""
+        bucket = entry.ladder.bucket_for(req.rows)
+        before = self._cache_size()
+        if req.conditional:
+            encoded = sample_synthetic_conditional(
+                entry.g_params, req.key, entry.cfg, entry.spans,
+                entry.tables, entry.cond_dim, bucket, req.hard,
+                self.use_pallas, self.interpret)
+        else:
+            encoded = sample_synthetic(
+                entry.g_params, req.key, entry.cfg, entry.spans,
+                entry.cond_dim, bucket, req.hard,
+                self.use_pallas, self.interpret)
+        return _Pending(req, entry, bucket, encoded, before)
+
+    def _finish(self, p: _Pending) -> SynthesisResponse:
+        """Stage 2: fused decode (ONE kernel dispatch) + host slice to
+        the requested row count.  Blocks on this request only."""
+        with ops.dispatch_scope() as d:
+            raw = p.entry.decode_plan.decode(p.encoded,
+                                             use_pallas=self.use_pallas,
+                                             interpret=self.interpret)
+        decode_disp = ops.stage_dispatches(d, "vgm_decode_table")
+        self.decode_dispatch_counts.append(decode_disp)
+        # hit = NO jitted stage compiled between generate dispatch and
+        # decode completion — decode-stage compiles count too.  With
+        # pipelining the windows of in-flight requests overlap, so one
+        # compile can flag both: conservative in the right direction for
+        # a zero-recompile contract.
+        cache_hit = self._cache_size() == p.cache_before
+        if cache_hit:
+            self.cache_hits += 1
+        else:
+            self.serving_compiles += 1
+        p.entry.served_requests += 1
+        p.entry.served_rows += p.req.rows
+        # copy when sliced: a view would pin the whole bucket-sized
+        # decode buffer for the response's lifetime
+        data = raw if p.req.rows == p.bucket else raw[:p.req.rows].copy()
+        return SynthesisResponse(p.req.rid, p.req.table, p.req.rows,
+                                 p.bucket, data, decode_disp, cache_hit)
+
+    # ---- serving ------------------------------------------------------
+    def stream(self) -> Iterator[SynthesisResponse]:
+        """Drain the queue, yielding responses in submission order.
+
+        With ``pipeline=True`` (default) request *i+1*'s generation is
+        dispatched BEFORE request *i*'s decode blocks, so device compute
+        and host-side decode/slice overlap (double buffering).  New
+        ``submit`` calls made while consuming the iterator join the same
+        drain — the streaming mode."""
+        pending: _Pending | None = None
+        while self._queue or pending is not None:
+            nxt = None
+            if self._queue:
+                nxt = self._generate(*self._queue.popleft())
+                if not self.pipeline:
+                    yield self._finish(nxt)
+                    continue
+            if pending is not None:
+                yield self._finish(pending)
+            pending = nxt
+
+    def serve(self) -> list[SynthesisResponse]:
+        """Drain the whole queue; list of responses in submission order."""
+        return list(self.stream())
+
+    def warmup(self, *, names: list[str] | None = None,
+               hard: bool | None = True, conditional: bool | None = None,
+               force: bool = False) -> int:
+        """Compile every (tenant, bucket, mode) program once, off the
+        request path.  Returns the number of executables built; after
+        this, any ladder-shaped trace in the warmed modes serves with
+        zero recompiles.
+
+        Combos this server already warmed are skipped (so registering a
+        new tenant — or unregistering and re-registering a name with a
+        fresh model — and re-calling ``warmup()`` runs only the new
+        programs).  ``names`` restricts to specific tenants; ``hard`` and
+        ``conditional`` restrict the activation/sampling modes (None
+        warms every mode the tenant supports; pass the modes your trace
+        actually uses to halve the compiles — the defaults cover the
+        ``submit`` defaults).  ``conditional=True`` on a tenant without
+        sampler tables raises (it cannot serve such a trace, so warming
+        it would silently promise nothing); ``force`` re-executes even
+        warm combos."""
+        before_total = self._cache_size()
+        key = jax.random.PRNGKey(0)
+        hard_modes = (False, True) if hard is None else (bool(hard),)
+        for name in names if names is not None else self.registry.names():
+            entry = self.registry.get(name)
+            has_cond = entry.tables is not None
+            if conditional is None:
+                modes = (False, True) if has_cond else (False,)
+            elif conditional:
+                if not has_cond:
+                    raise ValueError(
+                        f"table {name!r} registered without sampler "
+                        "tables: conditional warmup is meaningless")
+                modes = (True,)
+            else:
+                modes = (False,)
+            for bucket in entry.ladder.buckets:
+                for h in hard_modes:
+                    for cond in modes:
+                        combo = (entry.uid, bucket, h, cond)
+                        if combo in self._warmed and not force:
+                            continue
+                        req = SynthesisRequest(-1, name, bucket, key, h,
+                                               cond)
+                        p = self._generate(req, entry)
+                        p.entry.decode_plan.decode(
+                            p.encoded, use_pallas=self.use_pallas,
+                            interpret=self.interpret)
+                        self._warmed.add(combo)
+        built = self._cache_size() - before_total
+        self.warmup_compiles += built
+        return built
+
+    def stats(self) -> dict:
+        """Serving counters: the zero-recompile and one-dispatch-per-
+        request contracts as observable numbers."""
+        per_table = {
+            name: {"requests": self.registry.get(name).served_requests,
+                   "rows": self.registry.get(name).served_rows}
+            for name in self.registry.names()}
+        return {
+            "requests": len(self.decode_dispatch_counts),
+            "rows": sum(t["rows"] for t in per_table.values()),
+            "warmup_compiles": self.warmup_compiles,
+            "serving_compiles": self.serving_compiles,
+            "cache_hits": self.cache_hits,
+            "decode_dispatches": dict(collections.Counter(
+                self.decode_dispatch_counts)),
+            "tables": per_table,
+        }

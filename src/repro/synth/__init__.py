@@ -17,7 +17,9 @@ on device:
     dispatch instead of one op per column.
 """
 from .sampler import DeviceSampler, SamplerTables, draw_batch, stack_sampler_tables
-from .engine import RoundEngine, synthesize_table
+from .engine import (RoundEngine, sample_synthetic_conditional,
+                     synthesize_table)
 
 __all__ = ["DeviceSampler", "SamplerTables", "draw_batch",
-           "stack_sampler_tables", "RoundEngine", "synthesize_table"]
+           "stack_sampler_tables", "RoundEngine",
+           "sample_synthetic_conditional", "synthesize_table"]

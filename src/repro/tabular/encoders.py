@@ -164,6 +164,22 @@ class TableEncoders:
                                             self.label_encoders[j].n))
         return jnp.concatenate(parts, axis=1)
 
+    def prepare_plans(self, *, encode: bool = False) -> "DecodePlan":
+        """Force-build (and cache) the fused plans now; returns the
+        decode plan.
+
+        The serving registry calls this at table-registration time so the
+        one-off plan construction (packing VGM params, building the static
+        gathers) happens before the first request, not inside its latency.
+        Requests only ever decode, so the encode plan is skipped unless
+        ``encode=True`` (for callers that will also re-encode, e.g. to
+        refresh a tenant's sampler tables from new raw rows); training and
+        eval callers keep relying on the lazy ``plan()`` /
+        ``decode_plan()`` caches."""
+        if encode:
+            self.plan()
+        return self.decode_plan()
+
     def decode_plan(self) -> "DecodePlan":
         """The fused one-dispatch decode plan (built once, then cached)."""
         p = getattr(self, "_decode_plan", None)

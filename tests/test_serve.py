@@ -1,0 +1,322 @@
+"""Streaming synthesis serving: bucket aggregation bit-identity vs the
+unbatched ``synthesize_table`` oracle, jit-cache reuse (zero recompiles
+after warmup), and multi-tenant registry isolation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.gan.ctgan import CTGANConfig
+from repro.gan.trainer import init_gan_state, sample_synthetic
+from repro.kernels import ops
+from repro.serve import (BucketLadder, RequestTooLarge,
+                         StreamingSynthesizer, TableRegistry,
+                         default_ladder, ladder_from_sizes)
+from repro.synth import synthesize_table
+from repro.tabular import (ColumnSpec, fit_centralized_encoders,
+                           make_dataset)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class TestBucketLadder:
+    def test_bucket_for(self):
+        lad = BucketLadder((64, 128, 256))
+        assert lad.bucket_for(64) == 64            # rung-exact
+        assert lad.bucket_for(65) == 128           # round up
+        assert lad.bucket_for(1) == 64
+        assert lad.max_rows == 256
+
+    def test_rejects_out_of_range(self):
+        lad = BucketLadder((64, 128))
+        with pytest.raises(RequestTooLarge):
+            lad.bucket_for(129)
+        with pytest.raises(ValueError):
+            lad.bucket_for(0)
+
+    def test_validates_construction(self):
+        with pytest.raises(ValueError):
+            BucketLadder(())
+        with pytest.raises(ValueError):
+            BucketLadder((64, 64))
+        with pytest.raises(ValueError):
+            BucketLadder((0, 64))
+
+    def test_default_ladder_powers_of_two(self):
+        lad = default_ladder(1000, min_bucket=64)
+        assert lad.buckets == (64, 128, 256, 512, 1024)
+        assert default_ladder(64).buckets[0] == 64
+
+    def test_ladder_from_sizes_drops_unused_rungs(self):
+        lad = ladder_from_sizes([17, 100, 256, 500])
+        assert lad.buckets == (64, 128, 256, 512)
+        for s in [17, 100, 256, 500]:
+            assert lad.bucket_for(s) in lad.buckets
+
+
+class TestDispatchScope:
+    def test_scope_counts_without_clobbering_global(self, key):
+        slots = jnp.concatenate(
+            [jnp.zeros((8, 1)), jnp.ones((8, 2))], axis=1)
+        means, stds = jnp.zeros((1, 2)), jnp.ones((1, 2))
+        base = ops.DISPATCH_COUNTS["vgm_decode_table_ref"]
+        with ops.dispatch_scope() as d:
+            ops.vgm_decode_table(slots, means, stds, use_pallas=False)
+        assert d["vgm_decode_table_ref"] == 1
+        assert ops.stage_dispatches(d, "vgm_decode_table") == 1
+        # the global counter kept counting — scoping is non-destructive
+        assert ops.DISPATCH_COUNTS["vgm_decode_table_ref"] == base + 1
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One warm server over a small adult table (untrained generator —
+    serving correctness does not depend on training quality)."""
+    ds = make_dataset("adult", n_rows=500, seed=3)
+    key = jax.random.PRNGKey(3)
+    enc = fit_centralized_encoders(ds.data, ds.schema, key)
+    cfg = CTGANConfig(batch_size=8, gen_hidden=(16, 16),
+                      disc_hidden=(16, 16), pac=2, z_dim=8)
+    state = init_gan_state(key, cfg, enc.cond_dim, enc.encoded_dim)
+    encoded = np.asarray(enc.encode(ds.data, key))
+    registry = TableRegistry()
+    registry.register("adult", cfg, enc, state.g_params,
+                      ladder=BucketLadder((64, 128, 256)), encoded=encoded)
+    server = StreamingSynthesizer(registry)
+    built = server.warmup()
+    return ds, enc, cfg, state.g_params, registry, server, built
+
+
+class TestServingParity:
+    def test_bucket_exact_request_matches_oracle(self, served):
+        """A request whose rows is itself a rung is bit-identical to
+        ``synthesize_table`` at that exact size."""
+        ds, enc, cfg, g, _, server, _ = served
+        k = jax.random.PRNGKey(41)
+        server.submit("adult", 128, key=k)
+        [resp] = server.serve()
+        assert resp.bucket == 128
+        oracle = synthesize_table(g, k, cfg, enc, 128)
+        np.testing.assert_array_equal(resp.data, oracle)
+
+    def test_padded_request_matches_bucket_oracle(self, served):
+        """Rows below a rung: the response is the oracle evaluated at the
+        bucket, sliced — the documented bucket-granular contract."""
+        ds, enc, cfg, g, _, server, _ = served
+        k = jax.random.PRNGKey(42)
+        server.submit("adult", 100, key=k)
+        [resp] = server.serve()
+        assert (resp.rows, resp.bucket) == (100, 128)
+        oracle = synthesize_table(g, k, cfg, enc, 128)
+        np.testing.assert_array_equal(resp.data, oracle[:100])
+
+    @pytest.mark.parametrize("pipeline", [True, False])
+    def test_mixed_trace_fifo_and_bit_identical(self, served, pipeline):
+        """A mixed-size multi-bucket trace drains in submission order and
+        every response matches its own oracle, with and without the
+        double-buffered overlap."""
+        ds, enc, cfg, g, registry, _, _ = served
+        server = StreamingSynthesizer(registry, pipeline=pipeline)
+        trace = [(17, 50), (128, 51), (200, 52), (64, 53), (100, 54)]
+        rids = [server.submit("adult", rows, key=jax.random.PRNGKey(s))
+                for rows, s in trace]
+        assert len(server) == len(trace)
+        resps = server.serve()
+        assert len(server) == 0
+        assert [r.rid for r in resps] == rids
+        for r, (rows, s) in zip(resps, trace):
+            oracle = synthesize_table(g, jax.random.PRNGKey(s), cfg, enc,
+                                      r.bucket)
+            assert r.rows == rows
+            np.testing.assert_array_equal(r.data, oracle[:rows])
+
+    def test_same_key_is_reproducible(self, served):
+        ds, enc, cfg, g, _, server, _ = served
+        server.submit("adult", 70, seed=7)
+        server.submit("adult", 70, seed=7)
+        a, b = server.serve()
+        np.testing.assert_array_equal(a.data, b.data)
+
+    def test_conditional_mode_matches_oracle(self, served):
+        """Conditional requests draw cond vectors from the registered
+        SamplerTables — bit-identical to ``synthesize_table(tables=...)``."""
+        ds, enc, cfg, g, registry, server, _ = served
+        k = jax.random.PRNGKey(43)
+        server.submit("adult", 90, key=k, conditional=True)
+        [resp] = server.serve()
+        oracle = synthesize_table(g, k, cfg, enc, resp.bucket,
+                                  tables=registry.get("adult").tables)
+        np.testing.assert_array_equal(resp.data, oracle[:90])
+        # conditional and unconditional draws differ (cond is not zeroed)
+        uncond = synthesize_table(g, k, cfg, enc, resp.bucket)
+        assert not np.array_equal(resp.data, uncond[:90])
+
+
+class TestJitCacheReuse:
+    def test_zero_recompiles_after_warmup(self, served):
+        """Same-bucket requests reuse the warmup executables: the global
+        jit caches do not grow and the server counts only cache hits."""
+        ds, enc, cfg, g, _, server, built = served
+        assert built > 0                      # warmup actually compiled
+        before = server.stats()
+        cache_before = sample_synthetic._cache_size()
+        for i, rows in enumerate([64, 100, 128, 17, 256, 200, 64, 128]):
+            server.submit("adult", rows, seed=100 + i)
+        resps = server.serve()
+        after = server.stats()
+        assert sample_synthetic._cache_size() == cache_before
+        assert after["serving_compiles"] == before["serving_compiles"]
+        hits = after["cache_hits"] - before["cache_hits"]
+        assert hits == len(resps)
+        assert all(r.cache_hit for r in resps)
+
+    def test_one_decode_dispatch_per_request(self, served):
+        ds, enc, cfg, g, _, server, _ = served
+        for i in range(3):
+            server.submit("adult", 50 + i, seed=200 + i)
+        resps = server.serve()
+        assert [r.decode_dispatches for r in resps] == [1, 1, 1]
+        assert set(server.stats()["decode_dispatches"]) == {1}
+
+    def test_rewarmup_builds_nothing(self, served):
+        """Re-calling warmup with no new tenants skips warm combos and
+        builds zero executables."""
+        ds, enc, cfg, g, _, server, _ = served
+        assert server.warmup() == 0
+
+    def test_oversized_request_rejected_at_submit(self, served):
+        ds, enc, cfg, g, _, server, _ = served
+        with pytest.raises(RequestTooLarge):
+            server.submit("adult", 257)          # ladder tops out at 256
+        assert len(server) == 0
+
+
+class TestMultiTenant:
+    @pytest.fixture(scope="class")
+    def two_tables(self, served):
+        """Second tenant with a DIFFERENT schema (3 columns) and its own
+        ladder, registered next to adult."""
+        ds, enc, cfg, g, registry, server, _ = served
+        rng = np.random.default_rng(9)
+        table = np.stack([rng.normal(size=300),
+                          rng.integers(0, 4, 300).astype(np.float64),
+                          rng.normal(2.0, 0.5, 300)], axis=1)
+        schema = [ColumnSpec("a", "continuous", max_modes=4),
+                  ColumnSpec("b", "categorical"),
+                  ColumnSpec("c", "continuous", max_modes=4)]
+        key = jax.random.PRNGKey(9)
+        enc2 = fit_centralized_encoders(table, schema, key)
+        cfg2 = CTGANConfig(batch_size=8, gen_hidden=(8,), disc_hidden=(8,),
+                           pac=2, z_dim=4)
+        g2 = init_gan_state(key, cfg2, enc2.cond_dim,
+                            enc2.encoded_dim).g_params
+        registry.register("mixed", cfg2, enc2, g2,
+                          ladder=BucketLadder((32, 96)))
+        server.warmup()
+        return served, enc2, cfg2, g2
+
+    def test_interleaved_tenants_match_their_own_oracles(self, two_tables):
+        (ds, enc, cfg, g, _, server, _), enc2, cfg2, g2 = two_tables
+        ka, kb = jax.random.PRNGKey(61), jax.random.PRNGKey(62)
+        server.submit("adult", 100, key=ka)
+        server.submit("mixed", 40, key=kb)
+        server.submit("adult", 30, key=kb)
+        ra, rb, rc = server.serve()
+        assert ra.data.shape == (100, len(ds.schema))
+        assert rb.data.shape == (40, 3)
+        np.testing.assert_array_equal(
+            ra.data, synthesize_table(g, ka, cfg, enc, ra.bucket)[:100])
+        np.testing.assert_array_equal(
+            rb.data, synthesize_table(g2, kb, cfg2, enc2, rb.bucket)[:40])
+        np.testing.assert_array_equal(
+            rc.data, synthesize_table(g, kb, cfg, enc, rc.bucket)[:30])
+        # per-tenant resident state stayed distinct
+        reg = server.registry
+        assert reg.get("adult").decode_plan is not reg.get("mixed").decode_plan
+        assert reg.get("adult").ladder.buckets != reg.get("mixed").ladder.buckets
+
+    def test_registry_guards(self, two_tables):
+        (ds, enc, cfg, g, registry, server, _), enc2, cfg2, g2 = two_tables
+        with pytest.raises(ValueError, match="already registered"):
+            registry.register("adult", cfg, enc, g)
+        with pytest.raises(KeyError, match="unknown table"):
+            registry.get("nope")
+        with pytest.raises(KeyError):
+            server.submit("nope", 10)
+        # "mixed" was registered without sampler tables: no conditional
+        with pytest.raises(ValueError, match="conditional"):
+            server.submit("mixed", 10, conditional=True)
+
+    def test_unregister(self, two_tables):
+        (ds, enc, cfg, g, registry, server, _), *_ = two_tables
+        registry.register("temp", cfg, enc, g)
+        assert "temp" in registry
+        registry.unregister("temp")
+        assert "temp" not in registry
+        with pytest.raises(KeyError):
+            registry.get("temp")
+
+    def test_submitted_requests_survive_registry_mutation(self, two_tables):
+        """Requests bind to their tenant entry at submit: unregistering
+        the name afterwards neither crashes nor re-routes the drain."""
+        (ds, enc, cfg, g, registry, server, _), *_ = two_tables
+        registry.register("ephemeral", cfg, enc, g,
+                          ladder=BucketLadder((64,)))
+        k = jax.random.PRNGKey(77)
+        server.submit("ephemeral", 20, key=k)
+        registry.unregister("ephemeral")
+        [resp] = server.serve()
+        np.testing.assert_array_equal(
+            resp.data, synthesize_table(g, k, cfg, enc, 64)[:20])
+        with pytest.raises(KeyError):
+            server.submit("ephemeral", 20)
+
+    def test_conditional_warmup_without_tables_raises(self, two_tables):
+        (ds, enc, cfg, g, registry, server, _), *_ = two_tables
+        with pytest.raises(ValueError, match="conditional warmup"):
+            server.warmup(names=["mixed"], conditional=True)
+
+    def test_reregistered_name_rewarnms(self, two_tables):
+        """Re-registering a name with a refreshed model gets a fresh
+        registration uid, so warmup() re-runs its programs instead of
+        treating the stale warm-set entry as covered."""
+        (ds, enc, cfg, g, registry, server, _), *_ = two_tables
+        rng = np.random.default_rng(10)
+        table = np.stack([rng.normal(size=200),
+                          rng.integers(0, 3, 200).astype(np.float64)], 1)
+        schema = [ColumnSpec("a", "continuous", max_modes=3),
+                  ColumnSpec("b", "categorical")]
+        cfg3 = CTGANConfig(batch_size=8, gen_hidden=(8,), disc_hidden=(8,),
+                           pac=2, z_dim=4)
+        key = jax.random.PRNGKey(10)
+
+        def fresh_entry():
+            enc_i = fit_centralized_encoders(table, schema, key)
+            g_i = init_gan_state(key, cfg3, enc_i.cond_dim,
+                                 enc_i.encoded_dim).g_params
+            return registry.register("refresh", cfg3, enc_i, g_i,
+                                     ladder=BucketLadder((16,)))
+
+        first = fresh_entry()
+        assert server.warmup() > 0
+        registry.unregister("refresh")
+        second = fresh_entry()              # same name, new DecodePlan
+        assert second.uid != first.uid
+        assert server.warmup() > 0          # new extract program compiled
+        server.submit("refresh", 10, seed=1)
+        [r] = server.serve()
+        assert r.cache_hit and r.decode_dispatches == 1
+        registry.unregister("refresh")
+
+
+class TestPreparePlans:
+    def test_returns_cached_decode_plan(self, served):
+        ds, enc, cfg, g, _, _, _ = served
+        dp = enc.prepare_plans()
+        assert dp is enc.decode_plan()
+
+    def test_encode_flag_builds_encode_plan_too(self, served):
+        ds, enc, cfg, g, _, _, _ = served
+        dp = enc.prepare_plans(encode=True)
+        assert dp is enc.decode_plan()
+        assert enc.plan() is enc.plan()     # encode cache populated + stable
