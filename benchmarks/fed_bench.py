@@ -1,0 +1,151 @@
+"""Federated-round execution benchmarks: host loop vs one program.
+
+Two comparisons at >=2 client counts on a CI-scale Adult table:
+
+  rounds — the per-round host loop (one jitted global-round launch per
+      round: vmapped local rounds + per-leaf ``weighted_average`` merge,
+      exactly ``run_federated(program="host")``) vs the
+      :class:`repro.fed.FederatedProgram` one-program path (ALL rounds in
+      one ``lax.scan`` dispatch, in-program §4.2 weighting, ONE fused
+      ``weighted_agg`` merge of G+D per round).  Reports wall clock,
+      program launches per round, and merge kernel dispatches per round;
+      asserts the two paths produce matching merged generators (same
+      round-key stream, ulp tolerance for the in-program weighting)
+      before timing.
+
+  merge — the federator merge in isolation on a stacked CTGAN state:
+      per-leaf ``weighted_average`` (one mul+reduce per parameter leaf)
+      vs the whole-model flattened ``fused_weighted_merge`` (ONE
+      ``weighted_agg`` dispatch).
+
+Wired into ``run.py --only fed``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_average
+from repro.fed import FederatedProgram, fused_weighted_merge, setup_federation
+from repro.fed.merge import replicate
+from repro.kernels import ops
+from repro.tabular import make_dataset, partition_iid
+
+from .common import CI, emit
+from .synth_bench import _time_interleaved
+
+
+def _tree_equal(a, b):
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def bench_fed_rounds(P: int, rounds: int = 4, local_steps: int = 2,
+                     n_rows: int = 900) -> dict:
+    """One federation at P clients: R global rounds, host loop vs one
+    program (identical math — asserted — different dispatch structure)."""
+    cfg = CI.cfg
+    ds = make_dataset("adult", n_rows=n_rows, seed=0)
+    parts = partition_iid(ds, P, seed=0)
+    fe = setup_federation(parts, ds.schema, cfg, seed=0, weighting="fedtgan")
+    prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
+                            batch=cfg.batch_size, local_steps=local_steps,
+                            weighting="fedtgan")
+    key = jax.random.PRNGKey(0)
+    round_keys = prog.fold_round_keys(key, 0, rounds)
+    w = fe.weights
+
+    def host_round(states, tables, k):
+        states, metrics = prog.engine.clients_round(
+            states, tables, jax.random.split(k, P))
+        states = states._replace(
+            g_params=replicate(weighted_average(states.g_params, w), P),
+            d_params=replicate(weighted_average(states.d_params, w), P))
+        return states, metrics
+
+    host_round = jax.jit(host_round)
+
+    def host_loop():
+        st = fe.states
+        for r in range(rounds):
+            st, _ = host_round(st, fe.tables, round_keys[r])
+        return st
+
+    def one_program():
+        st, _ = prog.run(fe.states, fe.tables, fe.S, fe.n_rows, round_keys)
+        return st
+
+    # the structural contract before the stopwatch: one weighted_agg
+    # merge per round in the one-program trace, zero in the host loop...
+    ops.DISPATCH_COUNTS.clear()
+    st_host = host_loop()
+    assert ops.stage_dispatches(ops.DISPATCH_COUNTS, "weighted_agg") == 0
+    ops.DISPATCH_COUNTS.clear()
+    st_prog = one_program()
+    merge_disp = ops.stage_dispatches(ops.DISPATCH_COUNTS, "weighted_agg")
+    assert merge_disp == 1          # one merge in the scanned round body
+    ops.DISPATCH_COUNTS.clear()
+    # ...and matching merged generators (same round-key stream; ulp
+    # tolerance — the in-program Fig.4 recompute may fold a final ulp
+    # differently than the host loop's eager weights)
+    for a, b in zip(jax.tree.leaves(st_host.g_params),
+                    jax.tree.leaves(st_prog.g_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-6, atol=1e-7,
+                                   err_msg="one-program round diverged "
+                                           "from the host loop")
+
+    us_host, us_prog = _time_interleaved([host_loop, one_program], iters=4)
+    speedup = us_host / us_prog
+    emit(f"fed/host_loop_P{P}_R{rounds}x{local_steps}", us_host,
+         f"launches_per_round=1;merge=per_leaf")
+    emit(f"fed/one_program_P{P}_R{rounds}x{local_steps}", us_prog,
+         f"speedup={speedup:.2f}x;launches_per_round={1 / rounds:.2f};"
+         f"weighted_agg_dispatches_per_round=1")
+    return {"clients": P, "rounds": rounds, "local_steps": local_steps,
+            "us_host_loop": us_host, "us_one_program": us_prog,
+            "speedup": speedup,
+            "dispatches_per_round": {"host_launches": 1,
+                                     "program_launches": 1 / rounds,
+                                     "weighted_agg": 1}}
+
+
+def bench_merge(P: int = 5) -> dict:
+    """The federator merge alone on a stacked paper-size CTGAN state."""
+    from repro.gan.ctgan import CTGANConfig
+    from repro.gan.trainer import init_gan_state
+
+    cfg = CTGANConfig()                       # paper defaults (256x256 MLPs)
+    key = jax.random.PRNGKey(0)
+    state = init_gan_state(key, cfg, cond_dim=40, data_dim=180)
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x + i for i in range(P)]),
+        {"g": state.g_params, "d": state.d_params})
+    w = jax.nn.softmax(jnp.arange(P, dtype=jnp.float32))
+    n_leaves = len(jax.tree.leaves(stacked))
+    D = sum(int(np.prod(x.shape[1:])) for x in jax.tree.leaves(stacked))
+
+    leaf_fn = jax.jit(lambda t, w: weighted_average(t, w))
+    fused_fn = jax.jit(lambda t, w: fused_weighted_merge(t, w))
+    us_leaf, us_fused = _time_interleaved(
+        [lambda: leaf_fn(stacked, w), lambda: fused_fn(stacked, w)], iters=6)
+
+    ops.DISPATCH_COUNTS.clear()
+    out = jax.jit(fused_weighted_merge)(stacked, w)  # fresh trace -> counted
+    disp = ops.stage_dispatches(ops.DISPATCH_COUNTS, "weighted_agg")
+    ops.DISPATCH_COUNTS.clear()
+    assert _tree_equal(out, leaf_fn(stacked, w))
+
+    emit(f"merge/per_leaf_P{P}_D{D}", us_leaf, f"reduce_ops={n_leaves}")
+    emit(f"merge/fused_P{P}_D{D}", us_fused,
+         f"speedup={us_leaf / us_fused:.2f}x;weighted_agg_dispatches={disp}")
+    return {"clients": P, "D": D, "leaves": n_leaves, "us_per_leaf": us_leaf,
+            "us_fused": us_fused, "dispatches": disp}
+
+
+def run_all():
+    out = {"merge": bench_merge()}
+    # >=2 client counts for the acceptance matrix
+    out["rounds"] = [bench_fed_rounds(P) for P in (2, 4)]
+    return out

@@ -1,35 +1,59 @@
-"""Paper §5.3.3 ablation: one client holds 40k copies of a single row.
+"""Paper §5.3.3 ablation: one client holds N copies of a single row.
 
 Shows the similarity component of Fed-TGAN's weighting (vs quantity-only
 'Fed\\SW') detecting and down-weighting the degenerate client, and the
-effect on synthesis quality.
+effect on synthesis quality.  Runs through the one-program fed layer:
+the 'malicious' scenario partition from ``repro.fed.scenarios``, then
+``run_federated(program="fed")`` — every stretch of rounds between eval
+points is one dispatch of vmapped local rounds + in-program §4.2
+weighting + the fused whole-model merge.
 
 Run:  PYTHONPATH=src python examples/malicious_client_ablation.py
+      (options: --rows N --clients P --rounds R --host  — the --host flag
+       reruns Fed-TGAN on the legacy per-round loop and checks the
+       one-program path matched it)
 """
+import argparse
 import sys
+
 sys.path.insert(0, "src")
 
 import numpy as np
 
 from repro.core.architectures import run_federated
+from repro.fed import partition
 from repro.gan.ctgan import CTGANConfig
-from repro.tabular import make_dataset, partition_malicious
+from repro.tabular import make_dataset
 
 
 def main():
-    ds = make_dataset("intrusion", n_rows=2000, seed=0)
-    # paper proportions: 4 honest clients with IID samples, 1 malicious
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=2000)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--host", action="store_true",
+                    help="also run the legacy per-round loop and verify "
+                         "the one-program path matches it")
+    args = ap.parse_args()
+    if args.clients < 2:
+        ap.error("--clients must be >= 2 (one malicious + >=1 honest)")
+
+    ds = make_dataset("intrusion", n_rows=args.rows, seed=0)
+    # paper proportions: P-1 honest clients with IID samples, 1 malicious
     # client whose row count equals all honest data combined
-    parts = partition_malicious(ds, n_clients=5, good_rows=500, bad_rows=2000)
+    parts = partition("malicious", ds, args.clients, seed=0,
+                      good_rows=args.rows // (args.clients - 1),
+                      bad_rows=args.rows)
     cfg = CTGANConfig(batch_size=100, gen_hidden=(64, 64),
                       disc_hidden=(64, 64), pac=10, z_dim=64)
+    kw = dict(cfg=cfg, rounds=args.rounds, local_steps=1,
+              eval_real=ds.data, eval_every=max(args.rounds // 2, 1),
+              eval_samples=1024)
 
-    fed = run_federated(parts, ds.schema, cfg=cfg, rounds=6, local_steps=1,
-                        weighting="fedtgan", eval_real=ds.data,
-                        eval_every=3, eval_samples=1024, name="fed-tgan")
-    nsw = run_federated(parts, ds.schema, cfg=cfg, rounds=6, local_steps=1,
-                        weighting="quantity", eval_real=ds.data,
-                        eval_every=3, eval_samples=1024, name="fed-no-sw")
+    fed = run_federated(parts, ds.schema, weighting="fedtgan",
+                        name="fed-tgan", **kw)
+    nsw = run_federated(parts, ds.schema, weighting="quantity",
+                        name="fed-no-sw", **kw)
 
     print("malicious client weight:")
     print(f"  Fed-TGAN (similarity+quantity): {fed.weights[-1]:.3f}")
@@ -41,6 +65,19 @@ def main():
           f"wd={fed.history[-1]['avg_wd']:.3f}")
     print(f"  Fed\\SW : jsd={nsw.history[-1]['avg_jsd']:.3f} "
           f"wd={nsw.history[-1]['avg_wd']:.3f}")
+
+    if args.host:
+        import jax
+        host = run_federated(parts, ds.schema, weighting="fedtgan",
+                             name="fed-tgan-host", program="host", **kw)
+        # ulp tolerance: the in-program Fig.4 weights may fold a final
+        # ulp differently than the host loop's eager ones (the same
+        # contract tests/test_fed_engine.py holds the paths to)
+        for a, b in zip(jax.tree.leaves(host.final_g_params),
+                        jax.tree.leaves(fed.final_g_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-6, atol=1e-7)
+        print("\none-program == host-loop generator (ulp-tight): True")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,15 @@
 driving the SAME CTGAN substrate so comparisons are apples-to-apples.
 
 Simulation model: all clients execute "in parallel" as a stacked client
-axis under ``jax.vmap`` (host-side loop-free), mirroring the paper's
-rpc_async fan-out; the federator's merge is :func:`weighted_average`.
-Per-round wall-clock and bytes-on-wire come from :mod:`.comm_model`.
+axis, mirroring the paper's rpc_async fan-out.  Federated training runs
+through the :mod:`repro.fed` execution layer: ``setup_federation`` stages
+the §4.1 protocol + §4.2 divergence matrix on device, and
+:class:`repro.fed.FederatedProgram` lowers whole global rounds — vmapped
+local rounds, in-program Fig.4 weighting, ONE fused ``weighted_agg``
+merge, broadcast — into single dispatches (``program="fed"``; the
+per-round host loop survives as ``program="host"``, the parity oracle
+and benchmark baseline).  Per-round wall-clock and bytes-on-wire come
+from :mod:`.comm_model`.
 
 Training rounds run through the device-resident :mod:`repro.synth`
 engine: conditional batches are drawn inside the round's ``lax.scan``
@@ -16,25 +22,21 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..fed.merge import replicate as _replicate
+from ..fed.program import FederatedProgram
+from ..fed.setup import setup_federation
 from ..gan.ctgan import CTGANConfig
 from ..gan.trainer import GANState, init_gan_state
-from ..synth import (DeviceSampler, RoundEngine, draw_batch,
-                     stack_sampler_tables, synthesize_table)
+from ..synth import DeviceSampler, RoundEngine, draw_batch, synthesize_table
 from ..tabular.encoders import ColumnSpec, TableEncoders, fit_centralized_encoders
 from ..tabular.metrics import similarity_report
 from . import comm_model
 from .aggregation import weighted_average
-from .encoding import (ClientStats, compute_client_stats,
-                       federated_encoder_init, client_vgm_dicts)
-from .weighting import (fedtgan_weights, quantity_only_weights,
-                        uniform_weights, build_divergence_matrix,
-                        weights_from_divergence)
 
 
 @dataclasses.dataclass
@@ -48,104 +50,98 @@ class FedRunResult:
     comm_bytes_per_round: float
 
 
-def _stack_states(states: list[GANState]) -> GANState:
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-
-
-def _replicate(tree, P: int):
-    return jax.tree.map(lambda m: jnp.broadcast_to(m[None], (P,) + m.shape), tree)
-
-
-def _setup_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
-                     cfg: CTGANConfig, seed: int, weighting: str):
-    """Shared init path (§4.1 protocol + §4.2 weights) for all FL variants."""
-    P = len(client_data)
-    key = jax.random.PRNGKey(seed)
-    k_stats, k_init, k_w, k_model, k_enc = jax.random.split(key, 5)
-
-    stats = [compute_client_stats(d, schema, jax.random.fold_in(k_stats, i))
-             for i, d in enumerate(client_data)]
-    init = federated_encoder_init(stats, schema, k_init)
-    n_rows = jnp.asarray(init.n_rows, jnp.float32)
-
-    if weighting == "fedtgan":
-        w = fedtgan_weights(schema, init.client_cat_freqs,
-                            client_vgm_dicts(stats), init.encoders,
-                            init.global_cat_freqs, n_rows, k_w)
-    elif weighting == "uniform":
-        w = uniform_weights(P)
-    elif weighting == "quantity":          # Fed\SW ablation
-        w = quantity_only_weights(n_rows)
-    else:
-        raise ValueError(weighting)
-
-    enc = init.encoders
-    spans = tuple(enc.spans())
-    cond_spans = tuple(enc.condition_spans())
-    # stack the per-client sampler tables right away so only ONE device
-    # copy (the stacked, vmap-ready one) stays resident for the run
-    tables = stack_sampler_tables([DeviceSampler(
-        np.asarray(enc.encode(d, jax.random.fold_in(k_enc, i))), enc)
-        for i, d in enumerate(client_data)])
-    # Federator initializes ONE model and distributes it (identical start).
-    state0 = init_gan_state(k_model, cfg, enc.cond_dim, enc.encoded_dim)
-    states = [state0._replace(rng=jax.random.fold_in(state0.rng, i))
-              for i in range(P)]
-    return init, w, enc, spans, cond_spans, tables, _stack_states(states)
-
-
 def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                   *, cfg: CTGANConfig = CTGANConfig(), rounds: int = 20,
                   local_steps: int = 1, seed: int = 0,
                   weighting: str = "fedtgan",
                   eval_real: np.ndarray | None = None,
                   eval_every: int = 5, eval_samples: int = 4096,
-                  name: str | None = None) -> FedRunResult:
+                  name: str | None = None,
+                  program: str = "fed") -> FedRunResult:
     """Fed-TGAN (weighting='fedtgan'), vanilla FL ('uniform'), or the
-    Fed\\SW ablation ('quantity')."""
+    Fed\\SW ablation ('quantity').
+
+    ``program="fed"`` (default): the one-program path — every stretch of
+    rounds between eval points is ONE dispatch of
+    :class:`repro.fed.FederatedProgram` (scan of global rounds, fused
+    merge).  ``program="host"``: the legacy per-round jitted loop with
+    the per-leaf :func:`weighted_average` merge — kept as the numerical
+    oracle (`tests/test_fed_engine.py`) and the `fed` benchmark baseline.
+    Both paths consume the same round-key stream, so they are directly
+    comparable at identical seeds.
+    """
+    if program not in ("fed", "host"):
+        raise ValueError(f"unknown program {program!r}; options: fed, host")
     P = len(client_data)
-    init, w, enc, spans, cond_spans, tables, states = _setup_federated(
-        client_data, schema, cfg, seed, weighting)
-    engine = RoundEngine(cfg, spans, cond_spans, batch=cfg.batch_size,
-                         local_steps=local_steps)
+    fe = setup_federation(client_data, schema, cfg, seed, weighting)
+    enc = fe.enc
+    prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
+                            batch=cfg.batch_size, local_steps=local_steps,
+                            weighting=weighting)
 
-    def one_round(states, tables, key):
-        """Fed-TGAN round as ONE jitted program: per-client sampler draws
-        + local D/G steps (vmapped lax.scan) + weighted merge — zero host
-        transfers between steps."""
-        states, metrics = jax.vmap(engine.local_round)(
-            states, tables, jax.random.split(key, P))
-        merged_g = weighted_average(states.g_params, w)
-        merged_d = weighted_average(states.d_params, w)
-        states = states._replace(g_params=_replicate(merged_g, P),
-                                 d_params=_replicate(merged_d, P))
-        return states, metrics
-
-    one_round = jax.jit(one_round)
     model_bytes = comm_model.pytree_bytes(
-        jax.tree.map(lambda x: x[0], (states.g_params, states.d_params)))
+        jax.tree.map(lambda x: x[0], (fe.states.g_params, fe.states.d_params)))
     bytes_round = comm_model.fl_bytes_per_round(P, model_bytes)
 
     history = []
     key_eval = jax.random.PRNGKey(seed + 999)
     key_round = jax.random.PRNGKey(seed + 777)
     t0 = time.perf_counter()
-    for r in range(rounds):
-        states, metrics = one_round(states, tables,
-                                    jax.random.fold_in(key_round, r))
-        if eval_real is not None and ((r + 1) % eval_every == 0 or r == rounds - 1):
-            g = jax.tree.map(lambda x: x[0], states.g_params)
-            synth_raw = synthesize_table(g, jax.random.fold_in(key_eval, r),
-                                         cfg, enc, eval_samples)
-            rep = similarity_report(eval_real, synth_raw, schema)
-            rep.update(round=r + 1,
-                       d_loss=float(jnp.mean(metrics["d_loss"])),
-                       g_loss=float(jnp.mean(metrics["g_loss"])),
-                       t=time.perf_counter() - t0)
-            history.append(rep)
+
+    def evaluate(r: int, states: GANState, d_loss, g_loss):
+        """Eval at absolute round r (0-based) through the fused synthesis
+        path; appends the similarity report to history."""
+        g = jax.tree.map(lambda x: x[0], states.g_params)
+        synth_raw = synthesize_table(g, jax.random.fold_in(key_eval, r),
+                                     cfg, enc, eval_samples)
+        rep = similarity_report(eval_real, synth_raw, schema)
+        rep.update(round=r + 1, d_loss=float(d_loss), g_loss=float(g_loss),
+                   t=time.perf_counter() - t0)
+        history.append(rep)
+
+    def is_eval_round(r: int) -> bool:
+        return eval_real is not None and ((r + 1) % eval_every == 0
+                                          or r == rounds - 1)
+
+    states = fe.states
+    if program == "host":
+        w = fe.weights
+
+        def one_round(states, tables, key):
+            states, metrics = prog.engine.clients_round(
+                states, tables, jax.random.split(key, P))
+            merged_g = weighted_average(states.g_params, w)
+            merged_d = weighted_average(states.d_params, w)
+            states = states._replace(g_params=_replicate(merged_g, P),
+                                     d_params=_replicate(merged_d, P))
+            return states, metrics
+
+        one_round = jax.jit(one_round)
+        for r in range(rounds):
+            states, metrics = one_round(states, fe.tables,
+                                        jax.random.fold_in(key_round, r))
+            if is_eval_round(r):
+                evaluate(r, states, jnp.mean(metrics["d_loss"]),
+                         jnp.mean(metrics["g_loss"]))
+    else:
+        # one-program path: scan every stretch up to the next eval point
+        # in ONE dispatch (no eval => the whole run is one dispatch)
+        stops = [r for r in range(rounds) if is_eval_round(r)]
+        if rounds and (not stops or stops[-1] != rounds - 1):
+            stops.append(rounds - 1)
+        start = 0
+        for stop in stops:
+            keys = prog.fold_round_keys(key_round, start, stop + 1)
+            states, metrics = prog.run(states, fe.tables, fe.S, fe.n_rows,
+                                       keys)
+            if is_eval_round(stop):
+                evaluate(stop, states, jnp.mean(metrics["d_loss"][-1]),
+                         jnp.mean(metrics["g_loss"][-1]))
+            start = stop + 1
     dt = time.perf_counter() - t0
-    return FedRunResult(name or f"fed-{weighting}", np.asarray(w), history,
-                        enc, jax.tree.map(lambda x: x[0], states.g_params),
+    return FedRunResult(name or f"fed-{weighting}", np.asarray(fe.weights),
+                        history, enc,
+                        jax.tree.map(lambda x: x[0], states.g_params),
                         dt, bytes_round)
 
 
@@ -197,8 +193,9 @@ def run_mdtgan(client_data: list[np.ndarray], schema: list[ColumnSpec], *,
     P = len(client_data)
     # MD also needs agreed encoders; grant it the same §4.1 init (the paper
     # does the same for fairness).
-    init, _, enc, spans, cond_spans, tables, states = _setup_federated(
-        client_data, schema, cfg, seed, "uniform")
+    fe = setup_federation(client_data, schema, cfg, seed, "uniform")
+    enc, spans, cond_spans, tables, states = (fe.enc, fe.spans, fe.cond_spans,
+                                              fe.tables, fe.states)
     # keep one central G (slice 0), stack of P discriminators.
     g_state = jax.tree.map(lambda x: x[0], states)
 

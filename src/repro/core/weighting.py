@@ -10,6 +10,23 @@ Given a P×Q divergence matrix S (client i vs global stats, column j):
 ``build_divergence_matrix`` computes S from client statistics via JSD
 (categorical) / WD (continuous) — the same protocol data used for encoder
 initialization, so no extra privacy surface.
+
+Steps 1-4 are pure jnp, which is what lets the fed layer
+(:mod:`repro.fed`) fold them INTO the jitted global round: the divergence
+matrix is a device input and the weights are recomputed in-program.
+Example — client 0 diverges from the global stats on both columns, so it
+is down-weighted relative to an identical-size honest client:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.weighting import weights_from_divergence
+    >>> S = jnp.array([[0.8, 0.6],      # client 0: far from global
+    ...                [0.1, 0.1],      # clients 1, 2: close
+    ...                [0.1, 0.1]])
+    >>> w = weights_from_divergence(S, n_rows=jnp.array([500., 500., 500.]))
+    >>> bool(w[0] == w.min()), bool(jnp.isclose(w.sum(), 1.0))
+    (True, True)
+    >>> bool(jnp.allclose(w[1], w[2]))  # symmetric clients tie
+    True
 """
 from __future__ import annotations
 

@@ -1,0 +1,40 @@
+"""Client-sharded federated execution: whole global rounds as ONE program.
+
+The layer between the protocol math (:mod:`repro.core`) and the device
+engine (:mod:`repro.synth`):
+
+``setup_federation`` / ``Federation`` — runs the §4.1 encoder-init
+    protocol and §4.2 Step 0, encodes every client through the fused
+    plan, and stages stacked states + sampler tables on device.
+``FederatedProgram`` — lowers a global round (vmapped local rounds →
+    in-program Fig.4 weighting → ONE fused ``weighted_agg`` merge of G+D
+    → broadcast) into a single jitted program; ``run`` scans rounds so a
+    whole training run between eval points is one dispatch.
+``shard_map_global_round`` — the explicit-placement twin for multi-host
+    meshes: clients on a mesh axis, merge as one weighted psum.
+``scenarios`` — the paper's IID / Non-IID partition matrix (iid,
+    dirichlet label skew, quantity skew, full_copy, malicious) plus the
+    ``run_matrix`` driver crossing scenarios x weighting modes.
+"""
+from .merge import (flatten_stacked, fused_weighted_merge, replicate,
+                    unflatten_merged)
+from .program import WEIGHTINGS, FederatedProgram, resolve_weights
+from .setup import Federation, setup_federation
+from .sharded import shard_map_global_round, shard_map_weighted_round
+
+__all__ = ["flatten_stacked", "fused_weighted_merge", "replicate",
+           "unflatten_merged", "WEIGHTINGS", "FederatedProgram",
+           "resolve_weights", "Federation", "setup_federation",
+           "shard_map_global_round", "shard_map_weighted_round",
+           "SCENARIOS", "Scenario", "partition", "run_matrix"]
+
+_SCENARIO_EXPORTS = ("SCENARIOS", "Scenario", "partition", "run_matrix")
+
+
+def __getattr__(name):
+    # scenarios is loaded lazily so `python -m repro.fed.scenarios` does
+    # not import it twice (package import + runpy) and warn
+    if name in _SCENARIO_EXPORTS:
+        from . import scenarios
+        return getattr(scenarios, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,171 @@
+"""One-program federated rounds: the whole global round as ONE dispatch.
+
+The simulation drivers used to run Fed-TGAN as a Python loop — a jitted
+per-round program, but a host hop between every round, and a per-leaf
+merge.  :class:`FederatedProgram` lowers the complete global round into a
+single XLA program:
+
+    vmapped ``RoundEngine.local_round`` over the stacked client axis
+      (each client: E x (on-device conditional draw + D step + G step))
+    -> Fig.4 §4.2 weighting, recomputed IN-PROGRAM from the divergence
+       matrix (``weights_from_divergence``; uniform / quantity-only
+       selectable for the paper's ablations)
+    -> ONE fused ``weighted_agg`` merge of generator AND discriminator
+       parameters together (:func:`repro.fed.merge.fused_weighted_merge`)
+    -> broadcast of the merged model back onto the client axis
+
+and ``run`` scans that round over per-round keys, so an entire training
+run between eval points is one dispatch: only model state, sampler
+tables, the (P, Q) divergence matrix, and PRNG keys ever cross the host
+boundary.  The shard_map rendering for multi-host meshes lives in
+:mod:`repro.fed.sharded`.
+
+Example — two IID clients, one global round; after the round every
+client holds the SAME merged generator (the broadcast step):
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from repro.fed import FederatedProgram, setup_federation
+    >>> from repro.gan.ctgan import CTGANConfig
+    >>> from repro.tabular import ColumnSpec
+    >>> rng = np.random.default_rng(0)
+    >>> schema = [ColumnSpec("x", "continuous", max_modes=2),
+    ...           ColumnSpec("c", "categorical")]
+    >>> parts = [np.stack([rng.normal(size=48),
+    ...                    rng.integers(0, 3, 48)], 1) for _ in range(2)]
+    >>> cfg = CTGANConfig(batch_size=8, gen_hidden=(16,), disc_hidden=(16,),
+    ...                   pac=2, z_dim=4)
+    >>> fe = setup_federation(parts, schema, cfg, seed=0, weighting="uniform")
+    >>> prog = FederatedProgram(cfg, fe.spans, fe.cond_spans, batch=8,
+    ...                         local_steps=2, weighting="uniform")
+    >>> states, metrics = prog.round(fe.states, fe.tables, fe.S, fe.n_rows,
+    ...                              jax.random.PRNGKey(1))
+    >>> metrics["d_loss"].shape                    # (clients, local steps)
+    (2, 2)
+    >>> g0, g1 = (jax.tree.map(lambda x, i=i: x[i], states.g_params)
+    ...           for i in (0, 1))
+    >>> bool(all(jnp.array_equal(a, b) for a, b in
+    ...          zip(jax.tree.leaves(g0), jax.tree.leaves(g1))))
+    True
+    >>> _, m = prog.run(states, fe.tables, fe.S, fe.n_rows,
+    ...                 prog.fold_round_keys(jax.random.PRNGKey(2), 0, 3))
+    >>> m["g_loss"].shape                   # (rounds, clients, local steps)
+    (3, 2, 2)
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.weighting import (quantity_only_weights, uniform_weights,
+                              weights_from_divergence)
+from ..gan.ctgan import CTGANConfig
+from ..gan.trainer import GANState
+from ..synth import RoundEngine, SamplerTables
+from ..tabular.encoders import SpanInfo
+from .merge import fused_weighted_merge, replicate
+
+WEIGHTINGS = ("fedtgan", "uniform", "quantity")
+
+
+def resolve_weights(weighting: str, S: jnp.ndarray,
+                    n_rows: jnp.ndarray) -> jnp.ndarray:
+    """The §4.2 weight vector, as pure jnp so it composes into the jitted
+    round: ``fedtgan`` = Fig.4 steps 1-4 on the divergence matrix,
+    ``uniform`` = vanilla FL, ``quantity`` = the Fed\\SW ablation.  ``S``
+    is ignored (and may be a zeros placeholder) except under ``fedtgan``.
+    """
+    if weighting == "fedtgan":
+        return weights_from_divergence(S, n_rows)
+    if weighting == "quantity":
+        return quantity_only_weights(n_rows)
+    if weighting == "uniform":
+        return uniform_weights(n_rows.shape[0])
+    raise ValueError(f"unknown weighting {weighting!r}; options: {WEIGHTINGS}")
+
+
+class FederatedProgram:
+    """Client-sharded federated execution for one table schema.
+
+    Wraps a :class:`repro.synth.RoundEngine` and composes its vmapped
+    local rounds with in-program weighting and the fused whole-model
+    merge.  ``round`` runs ONE global round per dispatch; ``run`` scans
+    global rounds over a stacked key axis (one dispatch per chunk of
+    rounds).  ``global_round`` is the un-jitted pure function for callers
+    that lower it themselves (the mesh dry-run).
+    """
+
+    def __init__(self, cfg: CTGANConfig, spans: Sequence[SpanInfo],
+                 cond_spans: Sequence[SpanInfo], *, batch: int,
+                 local_steps: int, weighting: str = "fedtgan",
+                 engine: RoundEngine | None = None,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None):
+        if weighting not in WEIGHTINGS:
+            raise ValueError(f"unknown weighting {weighting!r}; "
+                             f"options: {WEIGHTINGS}")
+        self.cfg = cfg
+        self.weighting = weighting
+        self.engine = engine or RoundEngine(cfg, tuple(spans),
+                                            tuple(cond_spans), batch=batch,
+                                            local_steps=local_steps)
+        self._merge_kw = dict(use_pallas=use_pallas, interpret=interpret)
+        self.round = jax.jit(self.global_round)
+        self.run = jax.jit(self._run_impl)
+
+    # -- the one-program round -------------------------------------------
+
+    def merge_states(self, states: GANState, w: jnp.ndarray) -> GANState:
+        """Federator merge + redistribution: G and D parameters flattened
+        into ONE ``weighted_agg`` dispatch, then broadcast back onto the
+        client axis.  Optimizer moments stay local (the paper aggregates
+        model parameters only)."""
+        P = w.shape[0]
+        merged = fused_weighted_merge(
+            {"g": states.g_params, "d": states.d_params}, w, **self._merge_kw)
+        return states._replace(g_params=replicate(merged["g"], P),
+                               d_params=replicate(merged["d"], P))
+
+    def weighted_round(self, states: GANState, tables: SamplerTables,
+                       w: jnp.ndarray, key: jax.Array):
+        """One global round given resolved weights: vmapped local rounds
+        + fused merge + broadcast.  Metrics: (clients, local_steps)."""
+        P = w.shape[0]
+        states, metrics = self.engine.clients_round(
+            states, tables, jax.random.split(key, P))
+        return self.merge_states(states, w), metrics
+
+    def global_round(self, states: GANState, tables: SamplerTables,
+                     S: jnp.ndarray, n_rows: jnp.ndarray, key: jax.Array):
+        """One global round with the §4.2 weighting computed in-program
+        from the divergence matrix.  Pure: compose freely under jit/scan
+        or lower on a mesh (see ``launch.fed_dryrun``)."""
+        w = resolve_weights(self.weighting, S, n_rows)
+        return self.weighted_round(states, tables, w, key)
+
+    def _run_impl(self, states: GANState, tables: SamplerTables,
+                  S: jnp.ndarray, n_rows: jnp.ndarray,
+                  round_keys: jax.Array):
+        """Scan ``global_round`` over the leading axis of ``round_keys``:
+        R global rounds — local training, weighting, merge, broadcast —
+        in ONE dispatch.  Weights are resolved once (the divergence
+        matrix is protocol data, fixed for the run).  Metrics come back
+        stacked (rounds, clients, local_steps)."""
+        w = resolve_weights(self.weighting, S, n_rows)
+
+        def body(st, k):
+            return self.weighted_round(st, tables, w, k)
+
+        return jax.lax.scan(body, states, round_keys)
+
+    # -- key plumbing ----------------------------------------------------
+
+    @staticmethod
+    def fold_round_keys(key: jax.Array, start: int, stop: int) -> jax.Array:
+        """The simulation drivers' round-key stream — ``fold_in(key, r)``
+        for absolute round indices ``start..stop-1`` — stacked for
+        ``run``.  Using the same stream is what makes the one-program
+        path bit-comparable to the per-round host loop."""
+        return jnp.stack([jax.random.fold_in(key, r)
+                          for r in range(start, stop)])

@@ -29,6 +29,11 @@ _ON_TPU = jax.default_backend() == "tpu"
 # XLA's FMA contraction of ``alpha * 4 * sd + mu`` only happens inside jit.
 _vgm_decode_table_ref = jax.jit(ref.vgm_decode_table_ref)
 
+# The merge ref is jitted for the same reason: the fed layer asserts the
+# fused federator merge bit-matches the scaled-sum oracle, which means
+# both routes must see identical XLA contraction decisions.
+_weighted_agg_ref = jax.jit(ref.weighted_agg_ref)
+
 # Host-level kernel dispatch counter (per wrapper call); benchmarks use it
 # to prove the fused encode path issues ONE dispatch where the per-column
 # loop issues Q_cont.  Reset with ``DISPATCH_COUNTS.clear()``.
@@ -204,11 +209,21 @@ def mlstm_chunk(q, k, v, log_f, log_i, *, use_pallas=True, interpret=None,
     return _mlstm_chunk(q, k, v, log_f, log_i, chunk=chunk, interpret=interp)
 
 
-def weighted_average_flat(stacked, weights, *, use_pallas=True,
+def weighted_average_flat(stacked, weights, *, use_pallas=None,
                           interpret=None, block_d=16_384):
-    """stacked (P, D) -> (D,)."""
+    """Fused federator merge: stacked (P, D) client vectors -> (D,) merged.
+
+    ``use_pallas=None`` auto-routes like :func:`vgm_encode_table` (Pallas
+    kernel on TPU, jitted jnp oracle on CPU — bit-identical), and every
+    call counts toward the one-merge-dispatch-per-round contract the fed
+    layer asserts (``weighted_agg`` / ``weighted_agg_ref`` in
+    ``DISPATCH_COUNTS``)."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU or interpret is not None
     if not use_pallas:
-        return ref.weighted_agg_ref(stacked, weights)
+        DISPATCH_COUNTS["weighted_agg_ref"] += 1
+        return _weighted_agg_ref(stacked, weights)
+    DISPATCH_COUNTS["weighted_agg"] += 1
     interp = (not _ON_TPU) if interpret is None else interpret
     return _weighted_agg(stacked, weights, block_d=block_d, interpret=interp)
 

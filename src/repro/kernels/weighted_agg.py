@@ -8,6 +8,23 @@ memory-bound, so one-pass is optimal.
 
 Tiling: the flattened parameter dimension D is tiled (block_d); the client
 axis P rides whole in each tile (P is small: 5-32 clients).
+
+Weights are normalized inside the kernel, so any non-negative vector
+(e.g. raw §4.2 softmax output times a participation mask) merges
+correctly.  Example — 3 clients, uniform weights recover the mean, and
+the kernel agrees with the naive scaled sum even when D is not a
+multiple of ``block_d`` (here D=5, block_d=4 — the tail lanes are
+zero-padded and sliced back off):
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.kernels.weighted_agg import weighted_agg
+    >>> stacked = jnp.arange(15, dtype=jnp.float32).reshape(3, 5)
+    >>> w = jnp.full((3,), 1 / 3)
+    >>> out = weighted_agg(stacked, w, block_d=4, interpret=True)
+    >>> bool(jnp.allclose(out, stacked.mean(0)))
+    True
+    >>> out.shape                       # padding never leaks out
+    (5,)
 """
 from __future__ import annotations
 

@@ -11,7 +11,12 @@ P(dp, ...tensor spec...), local training is a vmapped lax.scan, and the
 weighted merge is one einsum over the client axis which GSPMD lowers to
 the all-reduce pattern over dp — the TPU rendering of the federator.
 
+The ctgan-paper arch lowers the paper's own workload through the
+:mod:`repro.fed` one-program layer (in-program §4.2 weighting + fused
+merge); ``--shard-map`` switches it to the explicit-placement rendering.
+
   PYTHONPATH=src python -m repro.launch.fed_dryrun --arch llama3-8b
+  PYTHONPATH=src python -m repro.launch.fed_dryrun --arch ctgan-paper --shard-map
   PYTHONPATH=src python -m repro.launch.fed_dryrun --all --multi-pod
 """
 import argparse
@@ -117,22 +122,33 @@ def lower_fed_round(arch: str, *, multi_pod: bool = False,
 
 
 def lower_ctgan_fed_round(*, multi_pod: bool = False,
-                          local_steps: int = LOCAL_STEPS):
-    """The PAPER'S OWN workload on the production mesh: one Fed-TGAN round
-    of CTGAN (G+D per client, weighted merge of both nets).  Clients ride
-    the data axes; encoders come from the §4.1 protocol on a synthetic
-    Adult table (host-side, as in the real system).
+                          local_steps: int = LOCAL_STEPS,
+                          shard_map: bool = False):
+    """The PAPER'S OWN workload on the production mesh: one Fed-TGAN
+    global round through the :mod:`repro.fed` execution layer — vmapped
+    local rounds, IN-PROGRAM §4.2 weighting from the divergence matrix,
+    and the fused whole-model merge, all in the one lowered program.
+    Clients ride the data axes; encoders come from the §4.1 protocol on a
+    synthetic Adult table (host-side, as in the real system).
 
-    The round lowers through the device-resident :mod:`repro.synth`
-    engine: each client's conditional batches are drawn INSIDE the local
-    ``lax.scan`` from sharded sampler tables, so the only per-round inputs
-    are model state, tables, weights, and one PRNG key — no presampled
-    batch arrays cross the host/device boundary."""
+    Two renderings of the same round:
+
+      * default — ``FederatedProgram.global_round`` with the client axis
+        stacked and sharded ``P(dp, ...)``; GSPMD places the merge as the
+        all-reduce pattern over dp.
+      * ``shard_map=True`` — :func:`repro.fed.shard_map_global_round`:
+        clients explicitly mapped onto the mesh axes, the merge an
+        explicit weighted psum — the multi-host placement proof.
+
+    Batches are drawn INSIDE each client's local ``lax.scan`` from the
+    sharded sampler tables, so the only per-round inputs are model state,
+    tables, the (P, Q) divergence matrix, row counts, and one PRNG key."""
     import numpy as np
     from ..configs.ctgan_paper import CONFIG as GAN_CFG, MAX_MODES
     from ..core.encoding import compute_client_stats, federated_encoder_init
+    from ..fed import FederatedProgram, shard_map_global_round
     from ..gan.trainer import init_gan_state
-    from ..synth import DeviceSampler, RoundEngine
+    from ..synth import DeviceSampler
     from ..tabular.datasets import make_dataset, partition_full_copy
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -169,42 +185,37 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
         (n_clients,) + a.shape, a.dtype), tables)
     tb_sp = jax.tree.map(lambda s: P(*((dp,) + (None,) * (len(s.shape) - 1))),
                          tb_sh)
-    weights = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+    S_sh = jax.ShapeDtypeStruct((n_clients, len(ds.schema)), jnp.float32)
+    n_rows_sh = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
     key_sh = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    engine = RoundEngine(GAN_CFG, spans, cond_spans,
-                         batch=GAN_CFG.batch_size, local_steps=local_steps)
 
-    def fed_round(states, tables, w, key):
-        states, metrics = jax.vmap(engine.local_round)(
-            states, tables, jax.random.split(key, n_clients))
-        wn = w / jnp.maximum(jnp.sum(w), 1e-12)
-
-        def merge(leaf):
-            wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
-            m = jnp.sum(leaf * wb, axis=0)
-            return jnp.broadcast_to(m[None], leaf.shape)
-
-        # the paper aggregates BOTH networks (G and D)
-        states = states._replace(g_params=jax.tree.map(merge, states.g_params),
-                                 d_params=jax.tree.map(merge, states.d_params))
-        return states, metrics
+    if shard_map:
+        program = shard_map_global_round(
+            mesh, GAN_CFG, spans, cond_spans, batch=GAN_CFG.batch_size,
+            local_steps=local_steps, weighting="fedtgan", client_axes=dp)
+    else:
+        program = FederatedProgram(
+            GAN_CFG, spans, cond_spans, batch=GAN_CFG.batch_size,
+            local_steps=local_steps, weighting="fedtgan").global_round
 
     from .shardings import named
     with mesh:
-        jitted = jax.jit(fed_round,
+        jitted = jax.jit(program,
                          in_shardings=(named(mesh, st_sp), named(mesh, tb_sp),
-                                       named(mesh, P(dp)), None),
+                                       named(mesh, P(dp)), named(mesh, P(dp)),
+                                       None),
                          out_shardings=(named(mesh, st_sp), None))
-        lowered = jitted.lower(st_sh, tb_sh, weights, key_sh)
+        lowered = jitted.lower(st_sh, tb_sh, S_sh, n_rows_sh, key_sh)
     return lowered, mesh, n_clients
 
 
-def run_one(arch: str, multi_pod: bool, agg_dtype: str = "f32") -> dict:
+def run_one(arch: str, multi_pod: bool, agg_dtype: str = "f32",
+            shard_map: bool = False) -> dict:
     t0 = time.time()
     try:
         if arch == "ctgan-paper":
             lowered, mesh, n_clients = lower_ctgan_fed_round(
-                multi_pod=multi_pod)
+                multi_pod=multi_pod, shard_map=shard_map)
         else:
             lowered, mesh, n_clients = lower_fed_round(
                 arch, multi_pod=multi_pod, agg_dtype=agg_dtype)
@@ -212,7 +223,8 @@ def run_one(arch: str, multi_pod: bool, agg_dtype: str = "f32") -> dict:
             compiled = lowered.compile()
         stats = analyze_hlo(compiled.as_text())
         mem = compiled.memory_analysis()
-        rec = {"arch": arch, "mode": "fed_round",
+        rec = {"arch": arch,
+               "mode": "fed_round_shard_map" if shard_map else "fed_round",
                "mesh": "2x16x16" if multi_pod else "16x16",
                "clients": n_clients, "local_steps": LOCAL_STEPS,
                "agg_dtype": agg_dtype,
@@ -239,6 +251,10 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--agg-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--shard-map", action="store_true",
+                    help="ctgan-paper only: lower the explicit shard_map "
+                         "rendering (repro.fed.sharded) instead of the "
+                         "stacked GSPMD one")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -247,7 +263,8 @@ def main():
     fails = 0
     for arch in archs:
         for mp in meshes:
-            rec = run_one(arch, mp, args.agg_dtype)
+            rec = run_one(arch, mp, args.agg_dtype,
+                          shard_map=args.shard_map and arch == "ctgan-paper")
             fails += rec["status"] == "FAIL"
             if args.out:
                 with open(args.out, "a") as f:

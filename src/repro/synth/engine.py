@@ -97,6 +97,16 @@ class RoundEngine:
             return self.step_fn(st, b)
         return jax.lax.scan(body, state, batches)
 
+    def clients_round(self, states: GANState, tables: SamplerTables,
+                      keys: jax.Array):
+        """All clients' local rounds "in parallel": ``local_round``
+        vmapped over the stacked client axis (states/tables from
+        ``stack_sampler_tables``, one key per client).  Pure and
+        un-jitted like ``local_round`` — the fed layer composes it with
+        the weighted merge inside ONE jitted global round
+        (:class:`repro.fed.FederatedProgram`)."""
+        return jax.vmap(self.local_round)(states, tables, keys)
+
     def run(self, state: GANState, tables: SamplerTables, key: jax.Array,
             rounds: int):
         """Many rounds in ONE dispatch: scan of local_round over round

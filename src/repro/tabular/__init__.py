@@ -5,6 +5,6 @@ from .vgm import (VGMParams, fit_vgm, sample_vgm, encode_column,
                   decode_column, pack_vgm_params, kernel_log_weights,
                   merge_client_vgms, merge_client_vgms_table)
 from .datasets import (TabularDataset, make_dataset, partition_full_copy,
-                       partition_quantity_skew, partition_malicious,
-                       partition_label_skew)
+                       partition_iid, partition_quantity_skew,
+                       partition_malicious, partition_label_skew)
 from .metrics import avg_jsd, avg_wd, similarity_report

@@ -87,6 +87,16 @@ def partition_full_copy(ds: TabularDataset, n_clients: int) -> list[np.ndarray]:
     return [ds.data.copy() for _ in range(n_clients)]
 
 
+def partition_iid(ds: TabularDataset, n_clients: int,
+                  seed: int = 0) -> list[np.ndarray]:
+    """Equal-size IID shards: one permutation dealt round-robin, so every
+    client sees the same marginals and |N_i| differs by at most one row.
+    (The disjoint-shard counterpart of ``partition_full_copy``.)"""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(ds.n_rows)
+    return [ds.data[np.sort(perm[i::n_clients])] for i in range(n_clients)]
+
+
 def partition_quantity_skew(ds: TabularDataset, n_clients: int,
                             small_rows: int = 500, seed: int = 0) -> list[np.ndarray]:
     """§5.3.2: clients 0..P-2 get ``small_rows`` IID rows, last client all."""
