@@ -1,17 +1,27 @@
-"""Paper §5.3.3 ablation: one client holds N copies of a single row.
+"""Paper §5.3.3 ablation, re-expressed on the chaos harness.
 
-Shows the similarity component of Fed-TGAN's weighting (vs quantity-only
-'Fed\\SW') detecting and down-weighting the degenerate client, and the
-effect on synthesis quality.  Runs through the one-program fed layer:
-the 'malicious' scenario partition from ``repro.fed.scenarios``, then
-``run_federated(program="fed")`` — every stretch of rounds between eval
-points is one dispatch of vmapped local rounds + in-program §4.2
-weighting + the fused whole-model merge.
+The original ablation poisoned the DATA (one client holding N copies of
+a single row) and showed Fed-TGAN's similarity weighting down-weighting
+it.  Here the adversary attacks the UPDATES instead — the last client
+ships byzantine-scaled deltas every round, modeled as a
+``repro.fed.faults.FaultPlan`` rather than an ad-hoc partition — and the
+defense is the in-program ``UpdateGuard``: the norm guard flags the
+scaled update, zeroes its weight, and renormalizes the survivors inside
+the SAME single fused ``weighted_agg`` merge dispatch.
+
+Three runs on IID shards, identical seeds:
+
+  clean      no faults — the reference trajectory.
+  attacked   byzantine client, guard OFF (diagnostics advisory only).
+  defended   byzantine client, guard ON (masked out of every merge).
+
+Plus a one-round probe of ``FederatedProgram.faulted_global_round``
+showing the per-client guard verdicts (``client_ok`` / ``w_eff``).
 
 Run:  PYTHONPATH=src python examples/malicious_client_ablation.py
-      (options: --rows N --clients P --rounds R --host  — the --host flag
-       reruns Fed-TGAN on the legacy per-round loop and checks the
-       one-program path matched it)
+      (options: --rows N --clients P --rounds R --scale S --host — the
+       --host flag reruns the defended run on the legacy per-round loop
+       and checks the one-program path matched it)
 """
 import argparse
 import sys
@@ -21,7 +31,8 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core.architectures import run_federated
-from repro.fed import partition
+from repro.fed import (FederatedProgram, UpdateGuard, byzantine_scale,
+                       partition, setup_federation)
 from repro.gan.ctgan import CTGANConfig
 from repro.tabular import make_dataset
 
@@ -31,50 +42,75 @@ def main():
     ap.add_argument("--rows", type=int, default=2000)
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--scale", type=float, default=64.0,
+                    help="byzantine delta scale for the malicious client")
     ap.add_argument("--host", action="store_true",
-                    help="also run the legacy per-round loop and verify "
-                         "the one-program path matches it")
+                    help="also run the defended setup on the legacy "
+                         "per-round loop and verify the one-program path "
+                         "matches it")
     args = ap.parse_args()
     if args.clients < 2:
         ap.error("--clients must be >= 2 (one malicious + >=1 honest)")
 
     ds = make_dataset("intrusion", n_rows=args.rows, seed=0)
-    # paper proportions: P-1 honest clients with IID samples, 1 malicious
-    # client whose row count equals all honest data combined
-    parts = partition("malicious", ds, args.clients, seed=0,
-                      good_rows=args.rows // (args.clients - 1),
-                      bad_rows=args.rows)
+    parts = partition("iid", ds, args.clients, seed=0)
+    bad = args.clients - 1                       # the adversary's slot
+    import jax
+    plan = byzantine_scale(jax.random.PRNGKey(0), args.rounds,
+                           args.clients, clients=[bad], scale=args.scale)
     cfg = CTGANConfig(batch_size=100, gen_hidden=(64, 64),
                       disc_hidden=(64, 64), pac=10, z_dim=64)
     kw = dict(cfg=cfg, rounds=args.rounds, local_steps=1,
               eval_real=ds.data, eval_every=max(args.rounds // 2, 1),
               eval_samples=1024)
 
-    fed = run_federated(parts, ds.schema, weighting="fedtgan",
-                        name="fed-tgan", **kw)
-    nsw = run_federated(parts, ds.schema, weighting="quantity",
-                        name="fed-no-sw", **kw)
+    clean = run_federated(parts, ds.schema, weighting="fedtgan",
+                          name="clean", **kw)
+    attacked = run_federated(parts, ds.schema, weighting="fedtgan",
+                             name="attacked", faults=plan, guard=None, **kw)
+    defended = run_federated(parts, ds.schema, weighting="fedtgan",
+                             name="defended", faults=plan,
+                             guard=UpdateGuard(), **kw)
 
-    print("malicious client weight:")
-    print(f"  Fed-TGAN (similarity+quantity): {fed.weights[-1]:.3f}")
-    print(f"  Fed\\SW  (quantity only):        {nsw.weights[-1]:.3f}")
-    assert fed.weights[-1] < nsw.weights[-1], \
-        "similarity component must down-weight the malicious client"
+    # one-round probe: what the guard decides, per client
+    fe = setup_federation(parts, ds.schema, cfg, 0, "fedtgan")
+    prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
+                            batch=cfg.batch_size, local_steps=1,
+                            weighting="fedtgan", guard=UpdateGuard())
+    fault0 = jax.tree.map(lambda a: a[0], plan)
+    _, m = prog.round_faulted(fe.states, fe.tables, fe.S, fe.n_rows,
+                              jax.random.PRNGKey(1), fault0)
+    ok = np.asarray(m["client_ok"])
+    w_eff = np.asarray(m["w_eff"])
+    print(f"guard verdicts (client {bad} is byzantine, "
+          f"scale={args.scale:g}):")
+    print(f"  client_ok = {ok.astype(int).tolist()}")
+    print(f"  w_eff     = {w_eff.round(3).tolist()}")
+    assert not ok[bad] and w_eff[bad] == 0.0, \
+        "norm guard must zero the byzantine client's merge weight"
+    assert ok[:bad].all(), "honest clients must survive the guard"
+
+    def q(res):
+        return res.history[-1]["avg_jsd"], res.history[-1]["avg_wd"]
+
     print("\nfinal quality (lower is better):")
-    print(f"  Fed-TGAN: jsd={fed.history[-1]['avg_jsd']:.3f} "
-          f"wd={fed.history[-1]['avg_wd']:.3f}")
-    print(f"  Fed\\SW : jsd={nsw.history[-1]['avg_jsd']:.3f} "
-          f"wd={nsw.history[-1]['avg_wd']:.3f}")
+    for res in (clean, attacked, defended):
+        jsd, wd = q(res)
+        print(f"  {res.name:9s} jsd={jsd:.3f} wd={wd:.3f}")
+    jsd_c, _ = q(clean)
+    jsd_d, _ = q(defended)
+    print(f"\ndefended vs clean jsd ratio: {jsd_d / max(jsd_c, 1e-9):.2f} "
+          f"(masked merge keeps the survivors' trajectory)")
 
     if args.host:
-        import jax
         host = run_federated(parts, ds.schema, weighting="fedtgan",
-                             name="fed-tgan-host", program="host", **kw)
-        # ulp tolerance: the in-program Fig.4 weights may fold a final
-        # ulp differently than the host loop's eager ones (the same
-        # contract tests/test_fed_engine.py holds the paths to)
+                             name="defended-host", program="host",
+                             faults=plan, guard=UpdateGuard(), **kw)
+        # ulp tolerance: the host oracle merges per-leaf, the one-program
+        # path through one fused flat pass (same contract as
+        # tests/test_fed_engine.py / test_faults.py parity checks)
         for a, b in zip(jax.tree.leaves(host.final_g_params),
-                        jax.tree.leaves(fed.final_g_params)):
+                        jax.tree.leaves(defended.final_g_params)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=3e-6, atol=1e-7)
         print("\none-program == host-loop generator (ulp-tight): True")

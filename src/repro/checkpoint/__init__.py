@@ -1,1 +1,2 @@
 from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .fed_checkpoint import save_fed_checkpoint, restore_fed_checkpoint

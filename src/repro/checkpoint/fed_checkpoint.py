@@ -1,0 +1,42 @@
+"""Federated-run checkpointing: model states + round cursor + blocklist.
+
+A federated run's restartable state is tiny: ``setup_federation`` is
+deterministic in ``(client_data, schema, cfg, seed)``, so the divergence
+matrix, encoders, and sampler tables never need to be persisted — only
+the stacked :class:`~repro.gan.trainer.GANState`, the absolute round
+cursor, and the retry wrapper's client blocklist.  ``run_federated``
+writes one checkpoint per eval chunk (the granularity at which the
+one-program path returns to the host anyway) and ``resume=True`` picks
+up from the latest one; because round keys come from
+``fold_in(key, absolute_round)``, the resumed trajectory is bit-exact
+against an uninterrupted run (pinned by ``tests/test_faults.py``).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def save_fed_checkpoint(ckpt_dir: str, round_idx: int, states,
+                        blocked=None) -> str:
+    """Persist a federated run at absolute round cursor ``round_idx``
+    (= rounds completed; the next round to run).  ``blocked`` is the
+    (P,) bool retry blocklist (defaults to nobody)."""
+    if blocked is None:
+        blocked = np.zeros(jax.tree.leaves(states)[0].shape[0], bool)
+    tree = {"states": states, "blocked": np.asarray(blocked, bool)}
+    return save_checkpoint(ckpt_dir, round_idx, tree)
+
+
+def restore_fed_checkpoint(ckpt_dir: str, like_states, n_clients: int,
+                           step: int | None = None):
+    """Restore ``(round_idx, states, blocked)`` from the latest (or an
+    explicit) checkpoint, shaped like ``like_states``."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    like = {"states": like_states, "blocked": np.zeros(n_clients, bool)}
+    tree = restore_checkpoint(ckpt_dir, like, step)
+    return step, tree["states"], np.asarray(tree["blocked"], bool)

@@ -27,6 +27,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint import (latest_step, restore_fed_checkpoint,
+                          save_fed_checkpoint)
+from ..fed.faults import (DEFAULT_NORM_MULT, FaultPlan, NoSurvivingClients,
+                          PoisonedRunError, UpdateGuard, apply_faults_tree,
+                          guard_ok, no_faults, sanitize_stacked,
+                          update_diagnostics)
+from ..fed.merge import flatten_stacked
 from ..fed.merge import replicate as _replicate
 from ..fed.program import FederatedProgram
 from ..fed.setup import setup_federation
@@ -37,6 +44,11 @@ from ..tabular.encoders import ColumnSpec, TableEncoders, fit_centralized_encode
 from ..tabular.metrics import similarity_report
 from . import comm_model
 from .aggregation import weighted_average
+from .fedavg import sample_participation
+
+# run_federated's guard default: "pick for me" — UpdateGuard() when a
+# FaultPlan is given (a chaos run should survive), no guard otherwise.
+_AUTO_GUARD = object()
 
 
 @dataclasses.dataclass
@@ -48,6 +60,14 @@ class FedRunResult:
     final_g_params: dict
     seconds: float
     comm_bytes_per_round: float
+    retries: int = 0               # poisoned eval chunks re-run from ckpt
+    blocked: np.ndarray | None = None   # (P,) retry blocklist at exit
+
+
+def _states_finite(states: GANState) -> bool:
+    """Host-side check that the merged model survived the chunk."""
+    return all(bool(jnp.all(jnp.isfinite(l))) for l in
+               jax.tree.leaves((states.g_params, states.d_params)))
 
 
 def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
@@ -57,7 +77,15 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                   eval_real: np.ndarray | None = None,
                   eval_every: int = 5, eval_samples: int = 4096,
                   name: str | None = None,
-                  program: str = "fed") -> FedRunResult:
+                  program: str = "fed",
+                  faults: FaultPlan | None = None,
+                  guard=_AUTO_GUARD,
+                  participation: float = 1.0,
+                  fedprox_mu: float = 0.0,
+                  ckpt_dir: str | None = None,
+                  resume: bool = False,
+                  max_retries: int = 2,
+                  retry_backoff: float = 0.0) -> FedRunResult:
     """Fed-TGAN (weighting='fedtgan'), vanilla FL ('uniform'), or the
     Fed\\SW ablation ('quantity').
 
@@ -68,16 +96,53 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     the per-leaf :func:`weighted_average` merge — kept as the numerical
     oracle (`tests/test_fed_engine.py`) and the `fed` benchmark baseline.
     Both paths consume the same round-key stream, so they are directly
-    comparable at identical seeds.
+    comparable at identical seeds — including under a ``FaultPlan``
+    (both honor the same schedule, guard, and masked merge).
+
+    Degraded-mode knobs:
+
+    ``faults`` — an (R, P) :class:`~repro.fed.faults.FaultPlan`; rounds
+    run through the deadline-masked path (mask + guard + renormalize
+    folded into the same single fused merge dispatch).
+    ``guard`` — :class:`~repro.fed.faults.UpdateGuard` policy for zeroing
+    corrupt updates in-program; defaults to ``UpdateGuard()`` when a plan
+    is given, off otherwise; pass ``None`` to force it off (diagnostics
+    stay advisory).
+    ``participation`` — partial participation fraction; each round keeps
+    each client with this probability (highest-weight client always
+    survives) via :func:`~repro.core.fedavg.sample_participation`.
+    ``fedprox_mu`` — FedProx proximal pull toward the round's global
+    params for the survivors (:func:`~repro.core.fedavg.fedprox_wrap`).
+    ``ckpt_dir`` — write a checkpoint (states + round cursor + blocklist)
+    after every eval chunk; ``resume=True`` restarts from the latest one
+    bit-exactly (round keys are absolute).
+    ``max_retries`` — on a poisoned chunk (non-finite merged state) the
+    run restores the chunk-start state, blocks the suspect clients, and
+    re-runs; after ``max_retries`` poisoned chunks it raises
+    :class:`~repro.fed.faults.PoisonedRunError`.  ``retry_backoff`` adds
+    ``retry_backoff * attempt`` seconds of sleep before each re-run.
     """
     if program not in ("fed", "host"):
         raise ValueError(f"unknown program {program!r}; options: fed, host")
     P = len(client_data)
+    if guard is _AUTO_GUARD:
+        guard = UpdateGuard() if faults is not None else None
+    use_faulted = (faults is not None or guard is not None
+                   or participation < 1.0)
+    if use_faulted and faults is None:
+        faults = no_faults(rounds, P)
+    if faults is not None:
+        if (faults.rounds, faults.n_clients) != (rounds, P):
+            raise ValueError(
+                f"FaultPlan is {(faults.rounds, faults.n_clients)}, run "
+                f"needs (rounds, clients) = {(rounds, P)}")
+        faults.validate()
     fe = setup_federation(client_data, schema, cfg, seed, weighting)
     enc = fe.enc
     prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
                             batch=cfg.batch_size, local_steps=local_steps,
-                            weighting=weighting)
+                            weighting=weighting, participation=participation,
+                            fedprox_mu=fedprox_mu, guard=guard)
 
     model_bytes = comm_model.pytree_bytes(
         jax.tree.map(lambda x: x[0], (fe.states.g_params, fe.states.d_params)))
@@ -104,45 +169,146 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                                           or r == rounds - 1)
 
     states = fe.states
-    if program == "host":
-        w = fe.weights
+    w = fe.weights
 
+    if program == "host":
+        # the per-round host-loop oracle; the faulted variant mirrors
+        # FederatedProgram.faulted_round with the per-leaf merge so
+        # host/fed parity holds under every FaultPlan.
         def one_round(states, tables, key):
-            states, metrics = prog.engine.clients_round(
-                states, tables, jax.random.split(key, P))
+            states, metrics = prog._clients(states, tables, key)
             merged_g = weighted_average(states.g_params, w)
             merged_d = weighted_average(states.d_params, w)
             states = states._replace(g_params=_replicate(merged_g, P),
                                      d_params=_replicate(merged_d, P))
             return states, metrics
 
+        def one_round_faulted(states, tables, key, fault):
+            participate = fault.participate
+            if participation < 1.0:
+                kp, key = jax.random.split(key)
+                participate = participate & sample_participation(
+                    w, kp, participation)
+            prev_g, prev_d = states.g_params, states.d_params
+            states, metrics = prog._clients(states, tables, key)
+            tree_prev = {"g": prev_g, "d": prev_d}
+            tree_f = apply_faults_tree(
+                {"g": states.g_params, "d": states.d_params}, tree_prev,
+                fault.nan_mask, fault.scale)
+            nm = (guard.norm_mult if guard is not None
+                  and guard.norm_mult > 0 else DEFAULT_NORM_MULT)
+            diag = update_diagnostics(flatten_stacked(tree_f),
+                                      flatten_stacked(tree_prev),
+                                      participate, norm_mult=nm)
+            ok = guard_ok(guard, diag, participate)
+            w_eff = w * ok
+            wsum = jnp.sum(w_eff)
+            safe = sanitize_stacked(tree_f, ok)
+            freeze = lambda m, p: jnp.where(wsum > 0, m, p[0])
+            merged_g = jax.tree.map(freeze, weighted_average(safe["g"], w_eff),
+                                    prev_g)
+            merged_d = jax.tree.map(freeze, weighted_average(safe["d"], w_eff),
+                                    prev_d)
+            states = states._replace(g_params=_replicate(merged_g, P),
+                                     d_params=_replicate(merged_d, P))
+            metrics = dict(metrics, client_ok=ok,
+                           client_suspect=participate & diag["suspect"],
+                           update_norm=diag["norm"],
+                           w_eff=w_eff / jnp.maximum(wsum, 1e-12),
+                           merged=wsum > 0)
+            return states, metrics
+
         one_round = jax.jit(one_round)
-        for r in range(rounds):
-            states, metrics = one_round(states, fe.tables,
-                                        jax.random.fold_in(key_round, r))
-            if is_eval_round(r):
-                evaluate(r, states, jnp.mean(metrics["d_loss"]),
-                         jnp.mean(metrics["g_loss"]))
-    else:
-        # one-program path: scan every stretch up to the next eval point
-        # in ONE dispatch (no eval => the whole run is one dispatch)
-        stops = [r for r in range(rounds) if is_eval_round(r)]
-        if rounds and (not stops or stops[-1] != rounds - 1):
-            stops.append(rounds - 1)
-        start = 0
-        for stop in stops:
+        one_round_faulted = jax.jit(one_round_faulted)
+
+    def run_chunk(states, start, stop, plan_chunk):
+        """Rounds start..stop inclusive.  Returns (states, (d, g) last-
+        round mean losses, (chunk_rounds, P) per-round suspect matrix)."""
+        suspects = np.zeros((stop + 1 - start, P), bool)
+        if program == "host":
+            for r in range(start, stop + 1):
+                k = jax.random.fold_in(key_round, r)
+                if plan_chunk is None:
+                    states, metrics = one_round(states, fe.tables, k)
+                else:
+                    fault = jax.tree.map(lambda a: a[r - start], plan_chunk)
+                    states, metrics = one_round_faulted(states, fe.tables,
+                                                        k, fault)
+                    suspects[r - start] = np.asarray(
+                        metrics["client_suspect"])
+            losses = (jnp.mean(metrics["d_loss"]),
+                      jnp.mean(metrics["g_loss"]))
+        else:
             keys = prog.fold_round_keys(key_round, start, stop + 1)
-            states, metrics = prog.run(states, fe.tables, fe.S, fe.n_rows,
-                                       keys)
-            if is_eval_round(stop):
-                evaluate(stop, states, jnp.mean(metrics["d_loss"][-1]),
-                         jnp.mean(metrics["g_loss"][-1]))
-            start = stop + 1
+            if plan_chunk is None:
+                states, metrics = prog.run(states, fe.tables, fe.S,
+                                           fe.n_rows, keys)
+            else:
+                states, metrics = prog.run_faulted(states, fe.tables, fe.S,
+                                                   fe.n_rows, keys,
+                                                   plan_chunk)
+                suspects = np.asarray(metrics["client_suspect"])
+            losses = (jnp.mean(metrics["d_loss"][-1]),
+                      jnp.mean(metrics["g_loss"][-1]))
+        return states, losses, suspects
+
+    stops = [r for r in range(rounds) if is_eval_round(r)]
+    if rounds and (not stops or stops[-1] != rounds - 1):
+        stops.append(rounds - 1)
+    start = 0
+    retries = 0
+    blocked = np.zeros(P, bool)
+    if resume and ckpt_dir and latest_step(ckpt_dir) is not None:
+        start, states, blocked = restore_fed_checkpoint(ckpt_dir, fe.states,
+                                                        P)
+    for stop in stops:
+        if stop < start:
+            continue                      # chunk already checkpointed
+        chunk_plan = None
+        if use_faulted:
+            chunk_plan = (faults.slice_rounds(start, stop + 1)
+                          .block_clients(blocked).validate())
+        while True:
+            new_states, losses, suspects = run_chunk(states, start, stop,
+                                                     chunk_plan)
+            if not use_faulted or _states_finite(new_states):
+                break
+            # poisoned chunk: block the suspects, restore the chunk-start
+            # state (held right here — checkpoints cover process death),
+            # and re-run the same rounds.
+            retries += 1
+            if retries > max_retries:
+                raise PoisonedRunError(
+                    f"global state non-finite after rounds "
+                    f"{start}..{stop}; retry budget ({max_retries}) "
+                    f"exhausted")
+            # blocklist from the FIRST suspect round: once the merge is
+            # poisoned, every later round flags everyone (all clients
+            # train from NaN params) — the union would block the world.
+            bad_rounds = np.nonzero(suspects.any(axis=1))[0]
+            offenders = (suspects[bad_rounds[0]] & ~blocked
+                         if bad_rounds.size else np.zeros(P, bool))
+            if not offenders.any():
+                raise PoisonedRunError(
+                    f"global state non-finite after rounds {start}..{stop} "
+                    f"but no client is suspect — cannot form a blocklist")
+            blocked |= offenders
+            chunk_plan = (faults.slice_rounds(start, stop + 1)
+                          .block_clients(blocked).validate())
+            if retry_backoff > 0:
+                time.sleep(retry_backoff * retries)
+        states = new_states
+        if ckpt_dir:
+            save_fed_checkpoint(ckpt_dir, stop + 1, states, blocked)
+        if is_eval_round(stop):
+            evaluate(stop, states, *losses)
+        start = stop + 1
     dt = time.perf_counter() - t0
     return FedRunResult(name or f"fed-{weighting}", np.asarray(fe.weights),
                         history, enc,
                         jax.tree.map(lambda x: x[0], states.g_params),
-                        dt, bytes_round)
+                        dt, bytes_round, retries=retries,
+                        blocked=blocked if use_faulted else None)
 
 
 def run_centralized(data: np.ndarray, schema: list[ColumnSpec], *,

@@ -85,15 +85,25 @@ def fedprox_wrap(step_fn, mu: float, lens: Callable = default_lens,
     return prox_step
 
 
+def sample_participation(weights: jnp.ndarray, key: jax.Array,
+                         fraction: float) -> jnp.ndarray:
+    """Partial-participation cohort draw: keep each client with prob
+    ``fraction``; the highest-weight client always survives, so a round
+    is never empty.  Returns the (P,) bool keep mask — the form the fed
+    layer's degraded-round path composes with its fault masks before the
+    single renormalize-and-merge."""
+    P = weights.shape[0]
+    keep = jax.random.bernoulli(key, fraction, (P,))
+    return keep.at[jnp.argmax(weights)].set(True)   # guarantee non-empty
+
+
 def sample_client_weights(weights: jnp.ndarray, key: jax.Array,
                           fraction: float) -> jnp.ndarray:
     """Partial participation: keep each client with prob ``fraction``
     (at least one survives), renormalize §4.2 weights over the sampled
     cohort.  Dropped clients get weight 0 — their slice trains but
     contributes nothing to the merge (SPMD-friendly: no dynamic shapes)."""
-    P = weights.shape[0]
-    keep = jax.random.bernoulli(key, fraction, (P,))
-    keep = keep.at[jnp.argmax(weights)].set(True)   # guarantee non-empty
+    keep = sample_participation(weights, key, fraction)
     w = jnp.where(keep, weights, 0.0)
     return w / jnp.maximum(jnp.sum(w), 1e-12)
 

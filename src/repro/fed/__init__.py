@@ -14,8 +14,16 @@ engine (:mod:`repro.synth`):
     meshes: clients on a mesh axis, merge as one weighted psum.
 ``scenarios`` — the paper's IID / Non-IID partition matrix (iid,
     dirichlet label skew, quantity skew, full_copy, malicious) plus the
-    ``run_matrix`` driver crossing scenarios x weighting modes.
+    ``run_matrix`` driver crossing scenarios x weighting modes x fault
+    regimes.
+``faults`` — the chaos harness: :class:`FaultPlan` schedules (dropout /
+    straggler / NaN corruption / byzantine scaling), the in-program
+    :class:`UpdateGuard`, and the degraded-round math behind
+    ``FederatedProgram.run_faulted``'s deadline-masked aggregation.
 """
+from .faults import (FaultPlan, NoSurvivingClients, PoisonedRunError,
+                     UpdateGuard, byzantine_scale, compose, corrupt_nans,
+                     dropout_uniform, no_faults, straggler_deadline)
 from .merge import (flatten_stacked, fused_weighted_merge, replicate,
                     unflatten_merged)
 from .program import WEIGHTINGS, FederatedProgram, resolve_weights
@@ -26,9 +34,14 @@ __all__ = ["flatten_stacked", "fused_weighted_merge", "replicate",
            "unflatten_merged", "WEIGHTINGS", "FederatedProgram",
            "resolve_weights", "Federation", "setup_federation",
            "shard_map_global_round", "shard_map_weighted_round",
-           "SCENARIOS", "Scenario", "partition", "run_matrix"]
+           "FaultPlan", "NoSurvivingClients", "PoisonedRunError",
+           "UpdateGuard", "byzantine_scale", "compose", "corrupt_nans",
+           "dropout_uniform", "no_faults", "straggler_deadline",
+           "SCENARIOS", "Scenario", "partition", "run_matrix",
+           "FAULTS", "build_fault_plan"]
 
-_SCENARIO_EXPORTS = ("SCENARIOS", "Scenario", "partition", "run_matrix")
+_SCENARIO_EXPORTS = ("SCENARIOS", "Scenario", "partition", "run_matrix",
+                     "FAULTS", "build_fault_plan")
 
 
 def __getattr__(name):

@@ -1,0 +1,328 @@
+"""Fault injection + degraded-round math for the one-program federation.
+
+Fed-TGAN's aggregation (§4.2, Fig.4) assumes every client returns a clean
+update every round.  Real federations do not: clients drop out, miss the
+round deadline, or ship corrupt (NaN/Inf or adversarially scaled)
+updates.  This module supplies the two halves of surviving that:
+
+* **:class:`FaultPlan`** — a per-round, per-client fault schedule
+  (participation mask, NaN corruption mask, byzantine delta scale) built
+  deterministically from a PRNG key by the ``fed.scenarios``-style
+  builders below (:func:`dropout_uniform`, :func:`straggler_deadline`,
+  :func:`corrupt_nans`, :func:`byzantine_scale`, composed with
+  :func:`compose`).  The plan is a pytree of ``(R, P)`` device arrays, so
+  it stages as device state and ``lax.scan`` consumes one ``(P,)`` slice
+  per round inside :meth:`repro.fed.FederatedProgram.run_faulted` — the
+  whole chaos run is still one dispatch per eval chunk.
+
+* **The degraded-round math** — :func:`apply_faults` corrupts the
+  transmitted ``(P, D)`` update stack (the model the client *sends*, not
+  its local state), :func:`update_diagnostics` computes the in-program
+  non-finite / update-norm guard signals, and :class:`UpdateGuard`
+  decides which clients' weights are zeroed before the single fused
+  ``weighted_agg`` merge.  Masked-out clients contribute an exact ``+0.0``
+  (values sanitized, weight zeroed — zeroing weights alone is not enough,
+  0 x NaN is NaN), so the masked merge is BIT-identical to the dense
+  merge of the surviving clients' updates with the dead rows zeroed: the
+  corrupt content cannot perturb the merge by a single ulp, and the
+  result equals the survivors-only merge up to XLA's reduction
+  association for the compacted shape — the contracts
+  ``tests/test_faults.py`` pins.
+
+Example — a dropout plan is deterministic in its key and always leaves a
+survivor by default:
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.fed.faults import dropout_uniform, no_faults, compose
+    >>> a = dropout_uniform(jax.random.PRNGKey(0), rounds=8, n_clients=4,
+    ...                     rate=0.5)
+    >>> b = dropout_uniform(jax.random.PRNGKey(0), rounds=8, n_clients=4,
+    ...                     rate=0.5)
+    >>> bool(jnp.array_equal(a.participate, b.participate))
+    True
+    >>> bool(a.participate.any(axis=1).all())   # no empty rounds
+    True
+    >>> c = compose(a, no_faults(8, 4))
+    >>> bool(jnp.array_equal(c.participate, a.participate))
+    True
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default multiplier for the update-norm guard: a client whose update
+# norm exceeds this multiple of the cohort's median is flagged.  Honest
+# CTGAN clients take near-identical adam steps, so their per-round update
+# norms cluster tightly; byzantine delta scaling multiplies the norm by
+# |scale| and stands out by construction.
+DEFAULT_NORM_MULT = 4.0
+
+
+class NoSurvivingClients(ValueError):
+    """Every client is masked for some round: aggregation has nothing to
+    merge.  Raised host-side (plan validation / retry blocklist growth);
+    the in-program path never divides by zero — it freezes the round
+    instead (keeps the previous global model)."""
+
+
+class PoisonedRunError(RuntimeError):
+    """The global state went non-finite and the retry budget (or the
+    ability to identify offending clients) is exhausted."""
+
+
+class FaultPlan(NamedTuple):
+    """Per-round, per-client fault schedule; every leaf is ``(R, P)``.
+
+    ``participate`` — False = the client misses the round (dropout or
+    deadline straggler): it still trains in the simulation (SPMD: no
+    dynamic shapes) but its weight is zero and its values are sanitized
+    out of the merge.
+    ``nan_mask`` — True = the client's *transmitted* update is NaN-poisoned
+    (its local state stays finite; corruption models the wire/update, and
+    the next broadcast overwrites client params anyway).
+    ``scale`` — byzantine delta scale: the client ships
+    ``global + scale * (update - global)``; 1.0 = honest (and is applied
+    as an exact no-op, so a neutral plan is bit-transparent).
+    """
+    participate: jax.Array
+    nan_mask: jax.Array
+    scale: jax.Array
+
+    @property
+    def rounds(self) -> int:
+        return int(self.participate.shape[0])
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.participate.shape[1])
+
+    def slice_rounds(self, start: int, stop: int) -> "FaultPlan":
+        """The plan restricted to absolute rounds ``start..stop-1`` — the
+        per-eval-chunk view ``run_federated`` scans."""
+        return FaultPlan(self.participate[start:stop],
+                         self.nan_mask[start:stop], self.scale[start:stop])
+
+    def block_clients(self, blocked) -> "FaultPlan":
+        """Remove a (P,) bool blocklist from participation for every
+        round — the retry wrapper's way of masking offenders."""
+        blocked = jnp.asarray(blocked, bool)
+        return self._replace(
+            participate=self.participate & ~blocked[None, :])
+
+    def validate(self) -> "FaultPlan":
+        """Raise :class:`NoSurvivingClients` if any round masks everyone
+        (checked host-side, where the plan is concrete)."""
+        alive = np.asarray(self.participate).any(axis=1)
+        if not alive.all():
+            dead = np.nonzero(~alive)[0].tolist()
+            raise NoSurvivingClients(
+                f"fault plan leaves no participating client in "
+                f"round(s) {dead}")
+        return self
+
+    def summary(self) -> dict:
+        """Host-side report: per-plan fault totals."""
+        part = np.asarray(self.participate)
+        return {
+            "rounds": self.rounds, "clients": self.n_clients,
+            "dropout_rate": float(1.0 - part.mean()),
+            "nan_client_rounds": int(np.asarray(self.nan_mask).sum()),
+            "byzantine_client_rounds": int(
+                (np.asarray(self.scale) != 1.0).sum()),
+        }
+
+
+def no_faults(rounds: int, n_clients: int) -> FaultPlan:
+    """The neutral plan: everyone participates, nothing is corrupted.
+    Running it through the faulted path is bit-identical to the dense
+    path (regression-tested)."""
+    return FaultPlan(jnp.ones((rounds, n_clients), bool),
+                     jnp.zeros((rounds, n_clients), bool),
+                     jnp.ones((rounds, n_clients), jnp.float32))
+
+
+def _ensure_participants(participate: jax.Array, key: jax.Array,
+                         min_participants: int) -> jax.Array:
+    """Force a key-chosen client into rounds that would otherwise be
+    empty (marginal rates stay untouched for every other round — pass
+    ``min_participants=0`` to test raw rates)."""
+    if min_participants <= 0:
+        return participate
+    R, P = participate.shape
+    idx = jax.random.randint(key, (R,), 0, P)
+    forced = jax.nn.one_hot(idx, P, dtype=bool)
+    need = jnp.sum(participate, axis=1) < min_participants
+    return jnp.where(need[:, None], participate | forced, participate)
+
+
+def dropout_uniform(key: jax.Array, rounds: int, n_clients: int, *,
+                    rate: float = 0.3,
+                    min_participants: int = 1) -> FaultPlan:
+    """Uniform per-(round, client) dropout: each client misses each round
+    independently with probability ``rate``."""
+    k_drop, k_fix = jax.random.split(key)
+    participate = ~jax.random.bernoulli(k_drop, rate, (rounds, n_clients))
+    plan = no_faults(rounds, n_clients)
+    return plan._replace(participate=_ensure_participants(
+        participate, k_fix, min_participants))
+
+
+def straggler_deadline(key: jax.Array, rounds: int, n_clients: int, *,
+                       mean_latency: float = 1.0, deadline: float = 2.0,
+                       min_participants: int = 1) -> FaultPlan:
+    """Deadline-based straggler model: per-(round, client) compute
+    latency ~ Exponential(``mean_latency``); clients past ``deadline``
+    miss the round (P(miss) = exp(-deadline/mean_latency))."""
+    k_lat, k_fix = jax.random.split(key)
+    latency = jax.random.exponential(
+        k_lat, (rounds, n_clients)) * float(mean_latency)
+    plan = no_faults(rounds, n_clients)
+    return plan._replace(participate=_ensure_participants(
+        latency <= deadline, k_fix, min_participants))
+
+
+def _pick_clients(key: jax.Array, n_clients: int, n_pick: int,
+                  clients: Sequence[int] | None) -> np.ndarray:
+    if clients is not None:
+        return np.asarray(list(clients), np.int32)
+    perm = np.asarray(jax.random.permutation(key, n_clients))
+    return perm[:n_pick].astype(np.int32)
+
+
+def corrupt_nans(key: jax.Array, rounds: int, n_clients: int, *,
+                 n_corrupt: int = 1, prob: float = 1.0,
+                 clients: Sequence[int] | None = None) -> FaultPlan:
+    """NaN corruption: the chosen clients (key-random unless ``clients``
+    is given) ship non-finite updates each round with probability
+    ``prob`` (default: every round)."""
+    k_pick, k_prob = jax.random.split(key)
+    chosen = _pick_clients(k_pick, n_clients, n_corrupt, clients)
+    hit = jax.random.bernoulli(k_prob, prob, (rounds, len(chosen)))
+    nan_mask = jnp.zeros((rounds, n_clients), bool)
+    nan_mask = nan_mask.at[:, jnp.asarray(chosen)].set(hit)
+    return no_faults(rounds, n_clients)._replace(nan_mask=nan_mask)
+
+
+def byzantine_scale(key: jax.Array, rounds: int, n_clients: int, *,
+                    n_byzantine: int = 1, scale: float = 64.0,
+                    clients: Sequence[int] | None = None) -> FaultPlan:
+    """Byzantine delta scaling: the chosen clients ship
+    ``global + scale * (update - global)`` every round — finite but
+    norm-exploded (caught by the update-norm guard, not the NaN guard)."""
+    chosen = _pick_clients(key, n_clients, n_byzantine, clients)
+    scales = jnp.ones((rounds, n_clients), jnp.float32)
+    scales = scales.at[:, jnp.asarray(chosen)].set(float(scale))
+    return no_faults(rounds, n_clients)._replace(scale=scales)
+
+
+def compose(*plans: FaultPlan) -> FaultPlan:
+    """Overlay fault plans: participation intersects (a client present
+    under every plan), NaN masks union, byzantine scales multiply."""
+    if not plans:
+        raise ValueError("compose() needs at least one plan")
+    shapes = {p.participate.shape for p in plans}
+    if len(shapes) != 1:
+        raise ValueError(f"fault plans disagree on (rounds, clients): "
+                         f"{sorted(shapes)}")
+    out = plans[0]
+    for p in plans[1:]:
+        out = FaultPlan(out.participate & p.participate,
+                        out.nan_mask | p.nan_mask,
+                        out.scale * p.scale)
+    return out
+
+
+# -- degraded-round math (shared by the fused path and the host oracle) --
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateGuard:
+    """In-program guard policy: which corrupt updates get their weight
+    zeroed before the merge.  ``nonfinite`` drops NaN/Inf updates;
+    ``norm_mult > 0`` additionally drops updates whose delta norm exceeds
+    ``norm_mult`` x the participating cohort's median (0 disables the
+    norm guard).  Static under jit (frozen/hashable)."""
+    nonfinite: bool = True
+    norm_mult: float = DEFAULT_NORM_MULT
+
+
+def apply_faults(new_flat: jnp.ndarray, prev_flat: jnp.ndarray,
+                 nan_mask: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Corrupt the transmitted ``(P, D)`` update stack per one round's
+    fault slice.  Honest clients (scale == 1, no NaN) pass through
+    BIT-identical — the scale formula only applies where scale != 1, so a
+    neutral plan cannot perturb the trajectory by a rounding ulp."""
+    scale = scale[:, None]
+    scaled = prev_flat + scale * (new_flat - prev_flat)
+    flat = jnp.where(scale == 1.0, new_flat, scaled)
+    return jnp.where(nan_mask[:, None], jnp.nan, flat)
+
+
+def apply_faults_tree(new_tree, prev_tree, nan_mask: jnp.ndarray,
+                      scale: jnp.ndarray):
+    """Per-leaf twin of :func:`apply_faults` for the host-oracle merge —
+    elementwise-identical math, so host and fused paths corrupt the same
+    bits."""
+    def one(n, p):
+        sh = (-1,) + (1,) * (n.ndim - 1)
+        s = scale.reshape(sh).astype(jnp.float32)
+        nf, pf = n.astype(jnp.float32), p.astype(jnp.float32)
+        scaled = pf + s * (nf - pf)
+        out = jnp.where(s == 1.0, nf, scaled)
+        return jnp.where(nan_mask.reshape(sh), jnp.nan, out).astype(n.dtype)
+    return jax.tree.map(one, new_tree, prev_tree)
+
+
+def update_diagnostics(flat: jnp.ndarray, prev_flat: jnp.ndarray,
+                       participate: jnp.ndarray, *,
+                       norm_mult: float = DEFAULT_NORM_MULT) -> dict:
+    """Per-client update health, computed in-program on the same ``(P, D)``
+    stack the fused merge consumes:
+
+    ``finite``  — the transmitted update is free of NaN/Inf.
+    ``norm``    — L2 norm of the client's delta from the round's global
+                  params (non-finite entries excluded so the statistic
+                  stays usable on poisoned clients).
+    ``norm_ok`` — norm <= ``norm_mult`` x median over the participating
+                  finite cohort (an empty cohort fails everyone — the
+                  round then freezes rather than merging garbage).
+    ``suspect`` — ~finite | ~norm_ok; the retry wrapper's blocklist
+                  signal, computed even when enforcement is off.
+    """
+    delta = flat - prev_flat
+    finite = jnp.all(jnp.isfinite(flat), axis=1)
+    norm = jnp.sqrt(jnp.sum(
+        jnp.where(jnp.isfinite(delta), delta, 0.0) ** 2, axis=1))
+    valid = participate & finite
+    med = jnp.nanmedian(jnp.where(valid, norm, jnp.nan))
+    norm_ok = norm <= norm_mult * jnp.maximum(med, 1e-12)
+    return {"finite": finite, "norm": norm, "norm_ok": norm_ok,
+            "suspect": ~finite | ~norm_ok}
+
+
+def guard_ok(guard: UpdateGuard | None, diag: dict,
+             participate: jnp.ndarray) -> jnp.ndarray:
+    """The (P,) survivor mask: participation AND whatever the guard
+    enforces (guard=None enforces nothing — diagnostics stay advisory)."""
+    ok = participate
+    if guard is not None:
+        if guard.nonfinite:
+            ok = ok & diag["finite"]
+        if guard.norm_mult > 0:
+            ok = ok & diag["norm_ok"]
+    return ok
+
+
+def sanitize_stacked(tree, ok: jnp.ndarray):
+    """Zero non-surviving clients' leaves so a zero weight times a
+    poisoned value contributes an exact ``+0.0`` to the merge (0 * NaN is
+    NaN — masking weights alone is not enough)."""
+    def one(leaf):
+        sh = (-1,) + (1,) * (leaf.ndim - 1)
+        return jnp.where(ok.reshape(sh), leaf, jnp.zeros((), leaf.dtype))
+    return jax.tree.map(one, tree)

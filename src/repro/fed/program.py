@@ -58,15 +58,30 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from ..core.fedavg import fedprox_wrap, sample_participation
 from ..core.weighting import (quantity_only_weights, uniform_weights,
                               weights_from_divergence)
 from ..gan.ctgan import CTGANConfig
-from ..gan.trainer import GANState
+from ..gan.trainer import GANState, make_train_steps
+from ..kernels import ops
 from ..synth import RoundEngine, SamplerTables
 from ..tabular.encoders import SpanInfo
-from .merge import fused_weighted_merge, replicate
+from .faults import (FaultPlan, UpdateGuard, apply_faults, guard_ok,
+                     update_diagnostics)
+from .merge import flatten_stacked, fused_weighted_merge, replicate, \
+    unflatten_merged
 
 WEIGHTINGS = ("fedtgan", "uniform", "quantity")
+
+
+def _gan_lens(state: GANState):
+    """FedProx lens for GANState: both networks' params are aggregated
+    (optimizer moments stay local, as in the paper's merge)."""
+    return (state.g_params, state.d_params)
+
+
+def _gan_merge(state: GANState, params) -> GANState:
+    return state._replace(g_params=params[0], d_params=params[1])
 
 
 def resolve_weights(weighting: str, S: jnp.ndarray,
@@ -101,18 +116,39 @@ class FederatedProgram:
                  local_steps: int, weighting: str = "fedtgan",
                  engine: RoundEngine | None = None,
                  use_pallas: bool | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 participation: float = 1.0,
+                 fedprox_mu: float = 0.0,
+                 guard: UpdateGuard | None = None):
         if weighting not in WEIGHTINGS:
             raise ValueError(f"unknown weighting {weighting!r}; "
                              f"options: {WEIGHTINGS}")
+        if not 0.0 < participation <= 1.0:
+            raise ValueError(f"participation must be in (0, 1], "
+                             f"got {participation}")
         self.cfg = cfg
         self.weighting = weighting
-        self.engine = engine or RoundEngine(cfg, tuple(spans),
-                                            tuple(cond_spans), batch=batch,
-                                            local_steps=local_steps)
+        self.participation = float(participation)
+        self.fedprox_mu = float(fedprox_mu)
+        self.guard = guard
+        if engine is None:
+            step_fn = None
+            if self.fedprox_mu > 0:
+                step_fn = fedprox_wrap(
+                    make_train_steps(cfg, tuple(spans), tuple(cond_spans)),
+                    self.fedprox_mu, lens=_gan_lens, merge=_gan_merge)
+            engine = RoundEngine(cfg, tuple(spans), tuple(cond_spans),
+                                 batch=batch, local_steps=local_steps,
+                                 step_fn=step_fn)
+        elif self.fedprox_mu > 0:
+            raise ValueError("pass either a prebuilt engine or fedprox_mu, "
+                             "not both (the prox step wraps the step_fn)")
+        self.engine = engine
         self._merge_kw = dict(use_pallas=use_pallas, interpret=interpret)
         self.round = jax.jit(self.global_round)
         self.run = jax.jit(self._run_impl)
+        self.round_faulted = jax.jit(self.faulted_global_round)
+        self.run_faulted = jax.jit(self._run_faulted_impl)
 
     # -- the one-program round -------------------------------------------
 
@@ -127,13 +163,21 @@ class FederatedProgram:
         return states._replace(g_params=replicate(merged["g"], P),
                                d_params=replicate(merged["d"], P))
 
+    def _clients(self, states: GANState, tables: SamplerTables,
+                 key: jax.Array):
+        """Vmapped local rounds, with the round's global params threaded
+        in as the FedProx anchor when drift control is on (every client's
+        pre-round params ARE the broadcast global model)."""
+        P = jax.tree.leaves(states.g_params)[0].shape[0]
+        aux = _gan_lens(states) if self.fedprox_mu > 0 else None
+        return self.engine.clients_round(states, tables,
+                                         jax.random.split(key, P), aux)
+
     def weighted_round(self, states: GANState, tables: SamplerTables,
                        w: jnp.ndarray, key: jax.Array):
         """One global round given resolved weights: vmapped local rounds
         + fused merge + broadcast.  Metrics: (clients, local_steps)."""
-        P = w.shape[0]
-        states, metrics = self.engine.clients_round(
-            states, tables, jax.random.split(key, P))
+        states, metrics = self._clients(states, tables, key)
         return self.merge_states(states, w), metrics
 
     def global_round(self, states: GANState, tables: SamplerTables,
@@ -158,6 +202,88 @@ class FederatedProgram:
             return self.weighted_round(st, tables, w, k)
 
         return jax.lax.scan(body, states, round_keys)
+
+    # -- the degraded round (fault masks + guard + masked merge) ---------
+
+    def faulted_round(self, states: GANState, tables: SamplerTables,
+                      w: jnp.ndarray, key: jax.Array, fault: FaultPlan):
+        """One global round under a (P,)-sliced :class:`FaultPlan`:
+        vmapped local rounds, fault injection on the TRANSMITTED update
+        stack, the non-finite/update-norm guard, then mask + renormalize
+        folded into the SAME single fused ``weighted_agg`` dispatch as
+        the dense round.
+
+        Survivor math: ``w_eff = w * participate * guard_ok``, values of
+        masked clients sanitized to exact zeros (0-weight x NaN would
+        still be NaN), the kernel renormalizes over the survivors.  An
+        all-masked round FREEZES (keeps the previous global model) —
+        never a divide by zero; the host-side :meth:`FaultPlan.validate`
+        is where that becomes a typed error.
+
+        With a neutral plan (everyone participates, nothing corrupted,
+        guard passing) this is bit-identical to :meth:`weighted_round`.
+
+        Extra metrics (all (P,) per round): ``client_ok`` (survived the
+        mask+guard), ``client_suspect`` (advisory corruption signal, fed
+        to the retry blocklist even when the guard is off),
+        ``update_norm``, ``w_eff`` (renormalized effective weights) and
+        scalar ``merged`` (False = the round froze)."""
+        P = w.shape[0]
+        participate = fault.participate
+        if self.participation < 1.0:
+            kp, key = jax.random.split(key)
+            participate = participate & sample_participation(
+                w, kp, self.participation)
+        prev_flat = flatten_stacked({"g": states.g_params,
+                                     "d": states.d_params})
+        states, metrics = self._clients(states, tables, key)
+        tree = {"g": states.g_params, "d": states.d_params}
+        flat = apply_faults(flatten_stacked(tree), prev_flat,
+                            fault.nan_mask, fault.scale)
+        norm_mult = (self.guard.norm_mult if self.guard is not None
+                     and self.guard.norm_mult > 0 else None)
+        diag = update_diagnostics(
+            flat, prev_flat, participate,
+            **({} if norm_mult is None else {"norm_mult": norm_mult}))
+        ok = guard_ok(self.guard, diag, participate)
+        w_eff = w * ok
+        wsum = jnp.sum(w_eff)
+        flat_safe = jnp.where(ok[:, None], flat, 0.0)
+        merged = ops.weighted_average_flat(flat_safe, w_eff,
+                                           **self._merge_kw)
+        merged = jnp.where(wsum > 0, merged, prev_flat[0])
+        out = unflatten_merged(merged, tree)
+        states = states._replace(g_params=replicate(out["g"], P),
+                                 d_params=replicate(out["d"], P))
+        metrics = dict(metrics, client_ok=ok,
+                       client_suspect=participate & diag["suspect"],
+                       update_norm=diag["norm"],
+                       w_eff=w_eff / jnp.maximum(wsum, 1e-12),
+                       merged=wsum > 0)
+        return states, metrics
+
+    def faulted_global_round(self, states: GANState, tables: SamplerTables,
+                             S: jnp.ndarray, n_rows: jnp.ndarray,
+                             key: jax.Array, fault: FaultPlan):
+        """:meth:`global_round` with a per-round fault slice — the pure
+        function ``launch.fed_dryrun --faults`` lowers on the mesh."""
+        w = resolve_weights(self.weighting, S, n_rows)
+        return self.faulted_round(states, tables, w, key, fault)
+
+    def _run_faulted_impl(self, states: GANState, tables: SamplerTables,
+                          S: jnp.ndarray, n_rows: jnp.ndarray,
+                          round_keys: jax.Array, plan: FaultPlan):
+        """Scan :meth:`faulted_round` over (round keys, fault slices):
+        a whole degraded stretch — dropouts, stragglers, corruption,
+        guard, masked merges — in ONE dispatch.  ``plan`` leaves carry a
+        leading (R,) axis aligned with ``round_keys``."""
+        w = resolve_weights(self.weighting, S, n_rows)
+
+        def body(st, xs):
+            k, fault = xs
+            return self.faulted_round(st, tables, w, k, fault)
+
+        return jax.lax.scan(body, states, (round_keys, plan))
 
     # -- key plumbing ----------------------------------------------------
 

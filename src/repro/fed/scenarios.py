@@ -13,11 +13,19 @@ ones.  Each :class:`Scenario` names a partitioner over a
                  the standard Non-IID benchmark split.
   ``malicious``  §5.3.3 ablation — one client repeats a single row.
 
-``run_matrix`` crosses datasets x scenarios x weighting modes through
-the one-program engine (``run_federated(program="fed")``), and the CLI
-runs a small matrix end to end:
+``run_matrix`` crosses datasets x scenarios x weighting modes — and,
+since the chaos harness landed, x fault regimes (:data:`FAULTS`: none /
+dropout / straggler / byzantine / nan / chaos, rendered as
+:class:`repro.fed.faults.FaultPlan` schedules) — through the one-program
+engine (``run_federated(program="fed")``), and the CLI runs a small
+matrix end to end:
 
     PYTHONPATH=src python -m repro.fed.scenarios --rows 400 --rounds 2
+    PYTHONPATH=src python -m repro.fed.scenarios --rows 400 --rounds 4 \\
+        --scenarios iid --faults none,chaos --clients 8
+
+The CLI exits non-zero if any cell's final global state is non-finite —
+the contract the CI ``chaos`` smoke lane enforces.
 
 All partitioners are deterministic in ``seed`` — same seed, same shards:
 
@@ -38,12 +46,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
 import numpy as np
 
 from ..gan.ctgan import CTGANConfig
 from ..tabular.datasets import (TabularDataset, partition_full_copy,
                                 partition_iid, partition_label_skew,
                                 partition_malicious, partition_quantity_skew)
+from .faults import (FaultPlan, byzantine_scale, compose, corrupt_nans,
+                     dropout_uniform, straggler_deadline)
 from .program import WEIGHTINGS
 
 
@@ -86,14 +97,44 @@ def partition(name: str, ds: TabularDataset, n_clients: int, *,
     return SCENARIOS[name].fn(ds, n_clients, seed=seed, **kw)
 
 
+# Named fault regimes for the matrix's --faults axis.  Each maps
+# (key, rounds, n_clients) -> FaultPlan | None; regimes are deterministic
+# in the key, so a matrix cell is reproducible from its seed alone.
+FAULTS: dict[str, Callable] = {
+    "none": lambda key, R, P: None,
+    "dropout": lambda key, R, P: dropout_uniform(key, R, P, rate=0.3),
+    "straggler": lambda key, R, P: straggler_deadline(
+        key, R, P, mean_latency=1.0, deadline=1.0),   # P(miss) ~ 0.37
+    "byzantine": lambda key, R, P: byzantine_scale(key, R, P,
+                                                   n_byzantine=1, scale=64.0),
+    "nan": lambda key, R, P: corrupt_nans(key, R, P, n_corrupt=1),
+    "chaos": lambda key, R, P: compose(
+        dropout_uniform(key, R, P, rate=0.3),
+        corrupt_nans(jax.random.fold_in(key, 1), R, P, n_corrupt=1),
+        byzantine_scale(jax.random.fold_in(key, 2), R, P,
+                        n_byzantine=1, scale=64.0)),
+}
+
+
+def build_fault_plan(name: str, rounds: int, n_clients: int, *,
+                     seed: int = 0) -> FaultPlan | None:
+    """Render a named fault regime into a validated plan (None = dense)."""
+    if name not in FAULTS:
+        raise ValueError(f"unknown fault regime {name!r}; "
+                         f"options: {sorted(FAULTS)}")
+    plan = FAULTS[name](jax.random.PRNGKey(seed + 4242), rounds, n_clients)
+    return plan.validate() if plan is not None else None
+
+
 def run_matrix(datasets=("adult",), scenarios=("iid", "dirichlet", "quantity"),
-               weightings=("fedtgan", "uniform"), *, n_clients: int = 3,
-               rows: int = 600, rounds: int = 2, local_steps: int = 1,
-               cfg: CTGANConfig | None = None, seed: int = 0,
-               eval_samples: int = 512) -> list[dict]:
-    """Cross datasets x scenarios x weighting modes through the
-    one-program engine; returns one record per cell (final similarity
-    metrics + the resolved client weights)."""
+               weightings=("fedtgan", "uniform"), faults=("none",), *,
+               n_clients: int = 3, rows: int = 600, rounds: int = 2,
+               local_steps: int = 1, cfg: CTGANConfig | None = None,
+               seed: int = 0, eval_samples: int = 512) -> list[dict]:
+    """Cross datasets x scenarios x weighting modes x fault regimes
+    through the one-program engine; returns one record per cell (final
+    similarity metrics, resolved client weights, and — for faulted cells
+    — the fault summary, retry count, and a host-side finiteness flag)."""
     from ..core.architectures import run_federated   # lazy: avoids cycle
     from ..tabular import make_dataset
     cfg = cfg or CTGANConfig(batch_size=60, gen_hidden=(32, 32),
@@ -106,32 +147,48 @@ def run_matrix(datasets=("adult",), scenarios=("iid", "dirichlet", "quantity"),
             for wmode in weightings:
                 if wmode not in WEIGHTINGS:
                     raise ValueError(f"unknown weighting {wmode!r}")
-                res = run_federated(parts, ds.schema, cfg=cfg, rounds=rounds,
-                                    local_steps=local_steps, seed=seed,
-                                    weighting=wmode, eval_real=ds.data,
-                                    eval_every=rounds,
-                                    eval_samples=eval_samples,
-                                    name=f"{d}/{sc}/{wmode}")
-                final = res.history[-1]
-                records.append({
-                    "dataset": d, "scenario": sc, "weighting": wmode,
-                    "clients": n_clients,
-                    "client_rows": [int(p.shape[0]) for p in parts],
-                    "weights": np.asarray(res.weights).round(4).tolist(),
-                    "avg_jsd": final["avg_jsd"], "avg_wd": final["avg_wd"],
-                    "seconds": res.seconds,
-                })
+                for fname in faults:
+                    plan = build_fault_plan(fname, rounds, n_clients,
+                                            seed=seed)
+                    res = run_federated(parts, ds.schema, cfg=cfg,
+                                        rounds=rounds,
+                                        local_steps=local_steps, seed=seed,
+                                        weighting=wmode, eval_real=ds.data,
+                                        eval_every=rounds,
+                                        eval_samples=eval_samples,
+                                        faults=plan,
+                                        name=f"{d}/{sc}/{wmode}/{fname}")
+                    final = res.history[-1]
+                    finite = all(
+                        bool(np.isfinite(np.asarray(l)).all())
+                        for l in jax.tree.leaves(res.final_g_params))
+                    records.append({
+                        "dataset": d, "scenario": sc, "weighting": wmode,
+                        "faults": fname, "clients": n_clients,
+                        "client_rows": [int(p.shape[0]) for p in parts],
+                        "weights": np.asarray(res.weights).round(4).tolist(),
+                        "avg_jsd": final["avg_jsd"],
+                        "avg_wd": final["avg_wd"],
+                        "seconds": res.seconds, "finite": finite,
+                        "retries": res.retries,
+                        "fault_summary": (plan.summary()
+                                          if plan is not None else None),
+                    })
     return records
 
 
 def main():
     import argparse
     import json
+    import sys
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--datasets", default="adult")
     ap.add_argument("--scenarios", default="iid,dirichlet,quantity")
     ap.add_argument("--weightings", default="fedtgan,uniform")
+    ap.add_argument("--faults", default="none",
+                    help=f"comma list of fault regimes "
+                         f"({','.join(sorted(FAULTS))})")
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--rows", type=int, default=600)
     ap.add_argument("--rounds", type=int, default=2)
@@ -143,17 +200,25 @@ def main():
     recs = run_matrix(datasets=args.datasets.split(","),
                       scenarios=args.scenarios.split(","),
                       weightings=args.weightings.split(","),
+                      faults=args.faults.split(","),
                       n_clients=args.clients, rows=args.rows,
                       rounds=args.rounds, local_steps=args.local_steps,
                       seed=args.seed)
     print(f"{'dataset':10s} {'scenario':10s} {'weighting':9s} "
-          f"{'avg_jsd':>8s} {'avg_wd':>8s}  weights")
+          f"{'faults':9s} {'avg_jsd':>8s} {'avg_wd':>8s} "
+          f"{'fin':>3s} {'try':>3s}  weights")
     for r in recs:
         print(f"{r['dataset']:10s} {r['scenario']:10s} {r['weighting']:9s} "
-              f"{r['avg_jsd']:8.3f} {r['avg_wd']:8.3f}  {r['weights']}")
+              f"{r['faults']:9s} {r['avg_jsd']:8.3f} {r['avg_wd']:8.3f} "
+              f"{'y' if r['finite'] else 'N':>3s} {r['retries']:3d}  "
+              f"{r['weights']}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(recs, f, indent=2)
+    if not all(r["finite"] for r in recs):
+        print("FAIL: non-finite final global state in at least one cell",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

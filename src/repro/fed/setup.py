@@ -56,6 +56,14 @@ class Federation:
     def n_clients(self) -> int:
         return int(self.n_rows.shape[0])
 
+    def fault_plan(self, regime: str, rounds: int, *, seed: int = 0):
+        """Render a named fault regime (see ``fed.scenarios.FAULTS``) into
+        a validated (rounds, P) :class:`~repro.fed.faults.FaultPlan` sized
+        for this federation — the input ``FederatedProgram.run_faulted``
+        scans alongside the round keys.  Returns None for ``"none"``."""
+        from .scenarios import build_fault_plan   # lazy: scenarios is heavy
+        return build_fault_plan(regime, rounds, self.n_clients, seed=seed)
+
 
 def setup_federation(client_data: list[np.ndarray], schema: list[ColumnSpec],
                      cfg: CTGANConfig, seed: int,
@@ -85,7 +93,10 @@ def setup_federation(client_data: list[np.ndarray], schema: list[ColumnSpec],
     else:
         # placeholder with the right client axis; dead code in-program
         S = jnp.zeros((P, len(schema)), jnp.float32)
-    w = resolve_weights(weighting, S, n_rows)
+    # jitted so the host copy folds EXACTLY like the in-program recompute:
+    # the eager trace can round the Fig.4 softmax a final ulp differently,
+    # and GAN rounds amplify that into host-vs-program parity noise
+    w = jax.jit(resolve_weights, static_argnums=0)(weighting, S, n_rows)
 
     enc = init.encoders
     # stack the per-client sampler tables right away so only ONE device

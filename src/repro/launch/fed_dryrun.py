@@ -17,6 +17,7 @@ merge); ``--shard-map`` switches it to the explicit-placement rendering.
 
   PYTHONPATH=src python -m repro.launch.fed_dryrun --arch llama3-8b
   PYTHONPATH=src python -m repro.launch.fed_dryrun --arch ctgan-paper --shard-map
+  PYTHONPATH=src python -m repro.launch.fed_dryrun --arch ctgan-paper --faults
   PYTHONPATH=src python -m repro.launch.fed_dryrun --all --multi-pod
 """
 import argparse
@@ -123,7 +124,7 @@ def lower_fed_round(arch: str, *, multi_pod: bool = False,
 
 def lower_ctgan_fed_round(*, multi_pod: bool = False,
                           local_steps: int = LOCAL_STEPS,
-                          shard_map: bool = False):
+                          shard_map: bool = False, faults: bool = False):
     """The PAPER'S OWN workload on the production mesh: one Fed-TGAN
     global round through the :mod:`repro.fed` execution layer — vmapped
     local rounds, IN-PROGRAM §4.2 weighting from the divergence matrix,
@@ -142,14 +143,25 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
 
     Batches are drawn INSIDE each client's local ``lax.scan`` from the
     sharded sampler tables, so the only per-round inputs are model state,
-    tables, the (P, Q) divergence matrix, row counts, and one PRNG key."""
+    tables, the (P, Q) divergence matrix, row counts, and one PRNG key.
+
+    ``faults=True`` lowers the DEGRADED round instead
+    (``FederatedProgram.faulted_global_round``): a (P,)-sliced FaultPlan
+    — participation mask, NaN mask, byzantine scale, sharded over the
+    client axes — plus the in-program guard, with the masked merge still
+    the same single fused ``weighted_agg`` pattern."""
     import numpy as np
     from ..configs.ctgan_paper import CONFIG as GAN_CFG, MAX_MODES
     from ..core.encoding import compute_client_stats, federated_encoder_init
-    from ..fed import FederatedProgram, shard_map_global_round
+    from ..fed import (FaultPlan, FederatedProgram, UpdateGuard,
+                       shard_map_global_round)
     from ..gan.trainer import init_gan_state
     from ..synth import DeviceSampler
     from ..tabular.datasets import make_dataset, partition_full_copy
+
+    if faults and shard_map:
+        raise ValueError("--faults lowers the stacked GSPMD rendering; "
+                         "combine it without --shard-map")
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_clients = 1
@@ -193,29 +205,41 @@ def lower_ctgan_fed_round(*, multi_pod: bool = False,
         program = shard_map_global_round(
             mesh, GAN_CFG, spans, cond_spans, batch=GAN_CFG.batch_size,
             local_steps=local_steps, weighting="fedtgan", client_axes=dp)
+    elif faults:
+        program = FederatedProgram(
+            GAN_CFG, spans, cond_spans, batch=GAN_CFG.batch_size,
+            local_steps=local_steps, weighting="fedtgan",
+            guard=UpdateGuard()).faulted_global_round
     else:
         program = FederatedProgram(
             GAN_CFG, spans, cond_spans, batch=GAN_CFG.batch_size,
             local_steps=local_steps, weighting="fedtgan").global_round
 
     from .shardings import named
+    in_sh = (named(mesh, st_sp), named(mesh, tb_sp),
+             named(mesh, P(dp)), named(mesh, P(dp)), None)
+    in_args = (st_sh, tb_sh, S_sh, n_rows_sh, key_sh)
+    if faults:
+        fault_sh = FaultPlan(
+            jax.ShapeDtypeStruct((n_clients,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_clients,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_clients,), jnp.float32))
+        in_sh += (FaultPlan(*([named(mesh, P(dp))] * 3)),)
+        in_args += (fault_sh,)
     with mesh:
-        jitted = jax.jit(program,
-                         in_shardings=(named(mesh, st_sp), named(mesh, tb_sp),
-                                       named(mesh, P(dp)), named(mesh, P(dp)),
-                                       None),
+        jitted = jax.jit(program, in_shardings=in_sh,
                          out_shardings=(named(mesh, st_sp), None))
-        lowered = jitted.lower(st_sh, tb_sh, S_sh, n_rows_sh, key_sh)
+        lowered = jitted.lower(*in_args)
     return lowered, mesh, n_clients
 
 
 def run_one(arch: str, multi_pod: bool, agg_dtype: str = "f32",
-            shard_map: bool = False) -> dict:
+            shard_map: bool = False, faults: bool = False) -> dict:
     t0 = time.time()
     try:
         if arch == "ctgan-paper":
             lowered, mesh, n_clients = lower_ctgan_fed_round(
-                multi_pod=multi_pod, shard_map=shard_map)
+                multi_pod=multi_pod, shard_map=shard_map, faults=faults)
         else:
             lowered, mesh, n_clients = lower_fed_round(
                 arch, multi_pod=multi_pod, agg_dtype=agg_dtype)
@@ -224,7 +248,8 @@ def run_one(arch: str, multi_pod: bool, agg_dtype: str = "f32",
         stats = analyze_hlo(compiled.as_text())
         mem = compiled.memory_analysis()
         rec = {"arch": arch,
-               "mode": "fed_round_shard_map" if shard_map else "fed_round",
+               "mode": ("fed_round_shard_map" if shard_map
+                        else "fed_round_faulted" if faults else "fed_round"),
                "mesh": "2x16x16" if multi_pod else "16x16",
                "clients": n_clients, "local_steps": LOCAL_STEPS,
                "agg_dtype": agg_dtype,
@@ -255,6 +280,9 @@ def main():
                     help="ctgan-paper only: lower the explicit shard_map "
                          "rendering (repro.fed.sharded) instead of the "
                          "stacked GSPMD one")
+    ap.add_argument("--faults", action="store_true",
+                    help="ctgan-paper only: lower the degraded round "
+                         "(FaultPlan mask + guard + masked fused merge)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -264,7 +292,8 @@ def main():
     for arch in archs:
         for mp in meshes:
             rec = run_one(arch, mp, args.agg_dtype,
-                          shard_map=args.shard_map and arch == "ctgan-paper")
+                          shard_map=args.shard_map and arch == "ctgan-paper",
+                          faults=args.faults and arch == "ctgan-paper")
             fails += rec["status"] == "FAIL"
             if args.out:
                 with open(args.out, "a") as f:

@@ -20,8 +20,10 @@ for how this composes with the fused device pipeline underneath.
 from .bucketing import (BucketLadder, RequestTooLarge, default_ladder,
                         ladder_from_sizes)
 from .registry import TableEntry, TableRegistry
-from .server import StreamingSynthesizer, SynthesisRequest, SynthesisResponse
+from .server import (ServerOverloaded, StreamingSynthesizer,
+                     SynthesisRequest, SynthesisResponse)
 
 __all__ = ["BucketLadder", "RequestTooLarge", "default_ladder",
            "ladder_from_sizes", "TableEntry", "TableRegistry",
-           "StreamingSynthesizer", "SynthesisRequest", "SynthesisResponse"]
+           "ServerOverloaded", "StreamingSynthesizer", "SynthesisRequest",
+           "SynthesisResponse"]

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Iterator
 
 import jax
@@ -48,17 +49,27 @@ from ..synth.engine import sample_synthetic_conditional
 from .registry import TableEntry, TableRegistry
 
 
+class ServerOverloaded(RuntimeError):
+    """The server's bounded request queue is full — the typed backpressure
+    signal (sibling of :class:`~repro.serve.bucketing.RequestTooLarge`):
+    shed load or retry later instead of growing the queue unboundedly."""
+
+
 @dataclasses.dataclass(frozen=True)
 class SynthesisRequest:
     """One table-synthesis request.  ``key`` is the request's PRNG
     identity: resubmitting the same (table, rows, key, hard, conditional)
-    returns bit-identical rows."""
+    returns bit-identical rows.  ``deadline_at`` (monotonic-clock
+    timestamp, None = no deadline) is the latest instant the request is
+    still worth serving — past it, the drain drops the request and
+    counts it expired rather than burning device time on a dead answer."""
     rid: int
     table: str
     rows: int
     key: jax.Array
     hard: bool = True
     conditional: bool = False
+    deadline_at: float | None = None
 
 
 @dataclasses.dataclass
@@ -94,11 +105,19 @@ class StreamingSynthesizer:
 
     def __init__(self, registry: TableRegistry, *,
                  use_pallas: bool | None = None,
-                 interpret: bool | None = None, pipeline: bool = True):
+                 interpret: bool | None = None, pipeline: bool = True,
+                 max_queue: int | None = None, clock=time.monotonic):
         self.registry = registry
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.pipeline = pipeline
+        # graceful degradation: bounded queue depth (None = unbounded)
+        # and an injectable monotonic clock for request deadlines, so
+        # expiry is testable without real sleeps
+        self.max_queue = max_queue
+        self.clock = clock
+        self.rejected_overload = 0
+        self.expired = 0
         # each queued request carries the TableEntry it was validated
         # against: registry mutations between submit and serve cannot
         # re-route or crash an accepted request
@@ -117,20 +136,37 @@ class StreamingSynthesizer:
     # ---- queue -------------------------------------------------------
     def submit(self, table: str, rows: int, *, key: jax.Array | None = None,
                seed: int | None = None, hard: bool = True,
-               conditional: bool = False) -> int:
+               conditional: bool = False,
+               deadline: float | None = None) -> int:
         """Enqueue a request; returns its id.  Validates table + bucket
-        NOW so oversized/unknown requests fail at submit, not mid-drain."""
+        NOW so oversized/unknown requests fail at submit, not mid-drain.
+
+        Backpressure at the door: with ``max_queue`` set, a full queue
+        raises :class:`ServerOverloaded` (counted in ``stats()``) before
+        any validation work.  ``deadline`` (seconds from now on the
+        server's clock) marks the request droppable: if the drain reaches
+        it past its deadline it is skipped and counted expired — no
+        response is produced for it."""
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self.rejected_overload += 1
+            raise ServerOverloaded(
+                f"queue depth {len(self._queue)} >= max_queue "
+                f"{self.max_queue}; retry later")
         entry = self.registry.get(table)
         entry.ladder.bucket_for(rows)              # raises RequestTooLarge
         if conditional and entry.tables is None:
             raise ValueError(f"table {table!r} registered without sampler "
                              "tables: conditional serving unavailable")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be positive, got {deadline}")
         rid = self._next_rid
         self._next_rid += 1
         if key is None:
             key = jax.random.PRNGKey(rid if seed is None else seed)
+        deadline_at = None if deadline is None else self.clock() + deadline
         self._queue.append((SynthesisRequest(rid, table, int(rows), key,
-                                             hard, conditional), entry))
+                                             hard, conditional, deadline_at),
+                            entry))
         return rid
 
     def __len__(self) -> int:
@@ -206,7 +242,12 @@ class StreamingSynthesizer:
         while self._queue or pending is not None:
             nxt = None
             if self._queue:
-                nxt = self._generate(*self._queue.popleft())
+                req, entry = self._queue.popleft()
+                if (req.deadline_at is not None
+                        and self.clock() > req.deadline_at):
+                    self.expired += 1     # dead on arrival: skip, no work
+                    continue
+                nxt = self._generate(req, entry)
                 if not self.pipeline:
                     yield self._finish(nxt)
                     continue
@@ -283,6 +324,8 @@ class StreamingSynthesizer:
             "warmup_compiles": self.warmup_compiles,
             "serving_compiles": self.serving_compiles,
             "cache_hits": self.cache_hits,
+            "rejected_overload": self.rejected_overload,
+            "expired": self.expired,
             "decode_dispatches": dict(collections.Counter(
                 self.decode_dispatch_counts)),
             "tables": per_table,

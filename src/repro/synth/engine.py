@@ -78,7 +78,7 @@ class RoundEngine:
         self._run_cache: dict[int, object] = {}
 
     def local_round(self, state: GANState, tables: SamplerTables,
-                    key: jax.Array):
+                    key: jax.Array, aux=None):
         """E local steps under one lax.scan, batches drawn on device.
 
         The round's E x batch conditional draws happen as ONE vectorized
@@ -87,25 +87,33 @@ class RoundEngine:
         faster on CPU — one threefry/gather pass instead of E), then the
         scan consumes the (E, batch, ...) stack.  Still zero host
         transfers: the draw lives inside the same XLA program as the
-        steps.  Returns (state, metrics with leading steps axis)."""
+        steps.  Returns (state, metrics with leading steps axis).
+
+        ``aux`` (optional pytree) is round-constant context threaded to
+        every step as ``step_fn(state, (batch, aux))`` — the hook the fed
+        layer uses to hand FedProx-wrapped steps the round's global
+        params (see :func:`repro.core.fedavg.fedprox_wrap`)."""
         E = self.local_steps
         big = draw_batch(tables, key, E * self.batch, self.cond_dim)
         batches = jax.tree.map(
             lambda a: a.reshape(E, self.batch, *a.shape[1:]), big)
 
         def body(st, b):
-            return self.step_fn(st, b)
+            return self.step_fn(st, b if aux is None else (b, aux))
         return jax.lax.scan(body, state, batches)
 
     def clients_round(self, states: GANState, tables: SamplerTables,
-                      keys: jax.Array):
+                      keys: jax.Array, aux=None):
         """All clients' local rounds "in parallel": ``local_round``
         vmapped over the stacked client axis (states/tables from
         ``stack_sampler_tables``, one key per client).  Pure and
         un-jitted like ``local_round`` — the fed layer composes it with
         the weighted merge inside ONE jitted global round
-        (:class:`repro.fed.FederatedProgram`)."""
-        return jax.vmap(self.local_round)(states, tables, keys)
+        (:class:`repro.fed.FederatedProgram`).  ``aux`` (if given) is a
+        stacked pytree vmapped alongside the states."""
+        if aux is None:
+            return jax.vmap(self.local_round)(states, tables, keys)
+        return jax.vmap(self.local_round)(states, tables, keys, aux)
 
     def run(self, state: GANState, tables: SamplerTables, key: jax.Array,
             rounds: int):

@@ -10,6 +10,7 @@ paper's 40k subsample.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -66,7 +67,9 @@ def make_dataset(name: str, *, n_rows: int | None = None,
     default_rows, n_cat, n_cont = _TABLE1[name]
     n = n_rows or default_rows
     rng = np.random.default_rng(seed)
-    base = abs(hash(name)) % (2 ** 31)
+    # crc32, not hash(): str hashing is salted per process, which silently
+    # made "seed=0" generate a different table in every interpreter
+    base = zlib.crc32(name.encode()) % (2 ** 31)
 
     cols, schema = [], []
     for j in range(n_cat):

@@ -1,0 +1,329 @@
+"""The chaos harness + degraded-round path: FaultPlan builders, the
+masked fused merge, the in-program guard, host/fed parity under faults,
+checkpointed resume, and the retry blocklist."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.architectures import run_federated
+from repro.fed import (FederatedProgram, NoSurvivingClients,
+                       PoisonedRunError, UpdateGuard, byzantine_scale,
+                       compose, corrupt_nans, dropout_uniform, no_faults,
+                       setup_federation, straggler_deadline)
+from repro.fed.faults import (apply_faults, apply_faults_tree, guard_ok,
+                              sanitize_stacked, update_diagnostics)
+from repro.fed.merge import flatten_stacked
+from repro.gan.ctgan import CTGANConfig
+from repro.kernels import ops
+from repro.tabular import ColumnSpec
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+CFG = CTGANConfig(batch_size=8, gen_hidden=(16,), disc_hidden=(16,),
+                  pac=2, z_dim=4)
+SCHEMA = [ColumnSpec("x", "continuous", max_modes=2),
+          ColumnSpec("c", "categorical")]
+P, R = 4, 3
+
+
+def make_parts(n_clients=P, rows=48, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.stack([rng.normal(size=rows), rng.integers(0, 3, rows)], 1)
+            for _ in range(n_clients)]
+
+
+def make_prog(fe, **kw):
+    kw.setdefault("guard", UpdateGuard())
+    return FederatedProgram(CFG, fe.spans, fe.cond_spans, batch=8,
+                            local_steps=2, weighting="uniform", **kw)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return setup_federation(make_parts(), SCHEMA, CFG, seed=0,
+                            weighting="uniform")
+
+
+@pytest.fixture(scope="module")
+def prog_guarded(fed):
+    return make_prog(fed)
+
+
+class TestFaultPlanBuilders:
+    def test_builders_deterministic_in_key(self, key):
+        for build in (lambda k: dropout_uniform(k, 8, 12, rate=0.4),
+                      lambda k: straggler_deadline(k, 8, 12),
+                      lambda k: corrupt_nans(k, 8, 12, n_corrupt=2,
+                                             prob=0.5),
+                      lambda k: byzantine_scale(k, 8, 12, n_byzantine=2)):
+            a, b = build(key), build(key)
+            for la, lb in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb))
+        # and the schedule actually moves with the key
+        a = dropout_uniform(key, 8, 12, rate=0.4)
+        c = dropout_uniform(jax.random.fold_in(key, 1), 8, 12, rate=0.4)
+        assert not bool(jnp.array_equal(a.participate, c.participate))
+
+    def test_dropout_rate_chi_squared(self, key):
+        """Raw dropout rate (min_participants=0) matches the requested
+        rate: one-cell chi-squared on the miss count at p=0.001."""
+        rate, rounds, clients = 0.3, 100, 20
+        plan = dropout_uniform(key, rounds, clients, rate=rate,
+                               min_participants=0)
+        n = rounds * clients
+        miss = int(n - np.asarray(plan.participate).sum())
+        chi2 = (miss - n * rate) ** 2 / (n * rate * (1 - rate))
+        assert chi2 < 10.83, f"dropout rate off: {miss}/{n} vs p={rate}"
+
+    def test_straggler_miss_rate(self, key):
+        """P(miss) = exp(-deadline/mean_latency) for the exponential
+        latency model, same chi-squared bound."""
+        mean, deadline, rounds, clients = 1.0, 1.0, 100, 20
+        p_miss = float(np.exp(-deadline / mean))
+        plan = straggler_deadline(key, rounds, clients, mean_latency=mean,
+                                  deadline=deadline, min_participants=0)
+        n = rounds * clients
+        miss = int(n - np.asarray(plan.participate).sum())
+        chi2 = (miss - n * p_miss) ** 2 / (n * p_miss * (1 - p_miss))
+        assert chi2 < 10.83
+
+    def test_min_participants_never_empty(self, key):
+        plan = dropout_uniform(key, 50, 4, rate=0.97)   # near-total loss
+        assert bool(plan.participate.any(axis=1).all())
+        plan.validate()                                  # does not raise
+
+    def test_compose_semantics(self, key):
+        a = dropout_uniform(key, R, P, rate=0.5, min_participants=0)
+        b = corrupt_nans(key, R, P, n_corrupt=1)
+        c = byzantine_scale(key, R, P, n_byzantine=1, scale=8.0)
+        m = compose(a, b, c)
+        np.testing.assert_array_equal(np.asarray(m.participate),
+                                      np.asarray(a.participate))
+        np.testing.assert_array_equal(np.asarray(m.nan_mask),
+                                      np.asarray(b.nan_mask))
+        np.testing.assert_array_equal(np.asarray(m.scale),
+                                      np.asarray(c.scale))
+        with pytest.raises(ValueError, match="disagree"):
+            compose(a, no_faults(R + 1, P))
+
+    def test_validate_raises_typed_error(self):
+        plan = no_faults(R, P)._replace(
+            participate=jnp.zeros((R, P), bool).at[1:].set(True))
+        with pytest.raises(NoSurvivingClients, match=r"round\(s\) \[0\]"):
+            plan.validate()
+
+    def test_block_clients_and_slice(self):
+        blocklist = np.zeros(P, bool)
+        blocklist[2] = True
+        plan = no_faults(R, P).block_clients(blocklist)
+        assert not bool(plan.participate[:, 2].any())
+        sl = plan.slice_rounds(1, 3)
+        assert sl.rounds == 2 and sl.n_clients == P
+        with pytest.raises(NoSurvivingClients):
+            plan.block_clients(np.ones(P, bool)).validate()
+
+
+class TestMaskedMergeMath:
+    def test_masked_merge_bit_identical_to_zeroed_survivor_stack(self, key):
+        """Corrupt content cannot perturb the merge by an ulp: the
+        sanitized masked merge bit-matches the merge of the same-shape
+        stack with the dead clients' rows zeroed by hand — and matches
+        the compacted survivors-only dense merge to reduction order."""
+        for n, d in [(4, 1000), (8, 513), (5, 64)]:
+            ka, kb, kc = jax.random.split(jax.random.fold_in(key, n), 3)
+            s = jax.random.normal(ka, (n, d), jnp.float32)
+            w = jax.random.uniform(kb, (n,)) + 0.1
+            ok = jax.random.bernoulli(kc, 0.6, (n,))
+            if not bool(ok.any()):
+                ok = ok.at[0].set(True)
+            garbage = jnp.where(ok[:, None], s,
+                                jnp.nan)          # what corruption ships
+            masked = ops.weighted_average_flat(
+                jnp.where(ok[:, None], garbage, 0.0), w * ok,
+                use_pallas=False)
+            oracle = ops.weighted_average_flat(
+                jnp.where(ok[:, None], s, 0.0), w * ok, use_pallas=False)
+            np.testing.assert_array_equal(np.asarray(masked),
+                                          np.asarray(oracle))
+            compact = ops.weighted_average_flat(
+                s[np.asarray(ok)], w[np.asarray(ok)], use_pallas=False)
+            np.testing.assert_allclose(np.asarray(masked),
+                                       np.asarray(compact),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_apply_faults_neutral_is_bit_transparent(self, key):
+        ka, kb = jax.random.split(key)
+        new = jax.random.normal(ka, (P, 200), jnp.float32)
+        prev = jax.random.normal(kb, (P, 200), jnp.float32)
+        plan = no_faults(1, P)
+        out = apply_faults(new, prev, plan.nan_mask[0], plan.scale[0])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(new))
+
+    def test_apply_faults_tree_matches_flat(self, key):
+        ka, kb = jax.random.split(key)
+        new = {"a": jax.random.normal(ka, (P, 8, 4)),
+               "b": jax.random.normal(kb, (P, 7))}
+        prev = jax.tree.map(lambda x: x + 0.5, new)
+        nan_mask = jnp.array([False, True, False, False])
+        scale = jnp.array([1.0, 1.0, 8.0, 1.0])
+        flat = apply_faults(flatten_stacked(new), flatten_stacked(prev),
+                            nan_mask, scale)
+        tree = apply_faults_tree(new, prev, nan_mask, scale)
+        np.testing.assert_array_equal(np.asarray(flatten_stacked(tree)),
+                                      np.asarray(flat))
+
+    def test_guard_flags_nan_and_norm(self, key):
+        ka, kb = jax.random.split(key)
+        prev = jax.random.normal(ka, (P, 300), jnp.float32)
+        new = prev + 0.01 * jax.random.normal(kb, (P, 300), jnp.float32)
+        flat = apply_faults(new, prev, jnp.array([0, 1, 0, 0], bool),
+                            jnp.array([1.0, 1.0, 64.0, 1.0]))
+        participate = jnp.ones(P, bool)
+        diag = update_diagnostics(flat, prev, participate)
+        ok = guard_ok(UpdateGuard(), diag, participate)
+        np.testing.assert_array_equal(np.asarray(ok),
+                                      [True, False, False, True])
+        # guard=None enforces nothing but the diagnostics stay advisory
+        np.testing.assert_array_equal(
+            np.asarray(guard_ok(None, diag, participate)), [True] * P)
+        np.testing.assert_array_equal(np.asarray(diag["suspect"]),
+                                      [False, True, True, False])
+
+    def test_sanitize_zeroes_masked_rows(self):
+        tree = {"a": jnp.full((3, 4), jnp.nan)}
+        ok = jnp.array([True, False, True])
+        out = sanitize_stacked(tree, ok)["a"]
+        assert bool(jnp.isnan(out[0]).all()) and bool(
+            jnp.isnan(out[2]).all())
+        np.testing.assert_array_equal(np.asarray(out[1]), np.zeros(4))
+
+
+class TestFaultedRound:
+    def test_neutral_plan_bit_identical_to_dense(self, fed):
+        prog = make_prog(fed, guard=None)
+        keys = prog.fold_round_keys(jax.random.PRNGKey(2), 0, R)
+        st_d, _ = prog.run(fed.states, fed.tables, fed.S, fed.n_rows, keys)
+        st_f, m = prog.run_faulted(fed.states, fed.tables, fed.S,
+                                   fed.n_rows, keys, no_faults(R, P))
+        for a, b in zip(jax.tree.leaves((st_d.g_params, st_d.d_params)),
+                        jax.tree.leaves((st_f.g_params, st_f.d_params))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert bool(jnp.all(m["client_ok"])) and bool(jnp.all(m["merged"]))
+
+    def test_nan_guard_zeroes_exactly_the_poisoned_client(
+            self, fed, prog_guarded):
+        plan = corrupt_nans(jax.random.PRNGKey(3), R, P, clients=[1])
+        keys = prog_guarded.fold_round_keys(jax.random.PRNGKey(2), 0, R)
+        st, m = prog_guarded.run_faulted(fed.states, fed.tables, fed.S,
+                                         fed.n_rows, keys, plan)
+        np.testing.assert_array_equal(np.asarray(m["client_ok"]),
+                                      np.tile([1, 0, 1, 1], (R, 1)))
+        np.testing.assert_array_equal(np.asarray(m["client_suspect"]),
+                                      np.tile([0, 1, 0, 0], (R, 1)))
+        assert all(bool(jnp.all(jnp.isfinite(l))) for l in
+                   jax.tree.leaves((st.g_params, st.d_params)))
+
+    def test_all_masked_round_freezes_not_divides(self, fed, prog_guarded):
+        """Every client masked: the in-program round keeps the previous
+        global model (never a 0/0) and flags merged=False."""
+        plan = no_faults(1, P)._replace(
+            participate=jnp.zeros((1, P), bool))
+        keys = prog_guarded.fold_round_keys(jax.random.PRNGKey(2), 0, 1)
+        st, m = prog_guarded.run_faulted(fed.states, fed.tables, fed.S,
+                                         fed.n_rows, keys, plan)
+        assert not bool(m["merged"][0])
+        for a, b in zip(jax.tree.leaves(fed.states.g_params),
+                        jax.tree.leaves(st.g_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_chaos_round_single_merge_dispatch(self, fed):
+        """The faulted path still executes exactly ONE weighted_agg
+        dispatch per round — mask/guard fold into the same fused merge."""
+        prog = make_prog(fed)       # fresh program -> fresh trace
+        plan = compose(
+            dropout_uniform(jax.random.PRNGKey(5), R, P, rate=0.3),
+            corrupt_nans(jax.random.PRNGKey(6), R, P, n_corrupt=1),
+            byzantine_scale(jax.random.PRNGKey(7), R, P, n_byzantine=1))
+        keys = prog.fold_round_keys(jax.random.PRNGKey(2), 0, R)
+        with ops.dispatch_scope() as d:
+            st, m = prog.run_faulted(fed.states, fed.tables, fed.S,
+                                     fed.n_rows, keys, plan)
+        assert ops.stage_dispatches(d, "weighted_agg") == 1
+        assert all(bool(jnp.all(jnp.isfinite(l))) for l in
+                   jax.tree.leaves((st.g_params, st.d_params)))
+
+
+class TestRunFederatedFaulted:
+    def _chaos_plan(self, rounds):
+        k = jax.random.PRNGKey(7)
+        return compose(
+            dropout_uniform(k, rounds, P, rate=0.3),
+            corrupt_nans(jax.random.fold_in(k, 1), rounds, P, n_corrupt=1),
+            byzantine_scale(jax.random.fold_in(k, 2), rounds, P,
+                            n_byzantine=1, scale=64.0))
+
+    def test_host_fed_parity_under_fault_plans(self, key):
+        parts = make_parts()
+        for plan in (self._chaos_plan(R),
+                     dropout_uniform(key, R, P, rate=0.5),
+                     byzantine_scale(key, R, P, n_byzantine=2,
+                                     scale=16.0)):
+            kw = dict(cfg=CFG, rounds=R, local_steps=2, seed=0,
+                      weighting="uniform", faults=plan)
+            fed = run_federated(parts, SCHEMA, **kw)
+            host = run_federated(parts, SCHEMA, program="host", **kw)
+            for a, b in zip(jax.tree.leaves(fed.final_g_params),
+                            jax.tree.leaves(host.final_g_params)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=3e-6, atol=1e-7)
+
+    def test_checkpoint_resume_bit_exact(self, tmp_path):
+        """Kill after the first eval chunk, resume from the checkpoint:
+        the final model bit-matches the uninterrupted run."""
+        parts = make_parts()
+        plan = self._chaos_plan(6)
+        kw = dict(cfg=CFG, rounds=6, local_steps=2, seed=0,
+                  weighting="uniform", faults=plan,
+                  eval_real=np.concatenate(parts), eval_every=3,
+                  eval_samples=32)
+        d = str(tmp_path / "ckpt")
+        full = run_federated(parts, SCHEMA, ckpt_dir=d, **kw)
+        for f in os.listdir(d):                  # "crash" after round 3
+            if "00000006" in f:
+                os.remove(os.path.join(d, f))
+        resumed = run_federated(parts, SCHEMA, ckpt_dir=d, resume=True,
+                                **kw)
+        for a, b in zip(jax.tree.leaves(full.final_g_params),
+                        jax.tree.leaves(resumed.final_g_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_retry_blocklists_poisoner_when_guard_off(self):
+        """Guard off: the NaN client poisons the chunk; the retry wrapper
+        restores, blocks exactly that client, and completes finite."""
+        parts = make_parts()
+        plan = corrupt_nans(jax.random.PRNGKey(3), R, P, clients=[2])
+        res = run_federated(parts, SCHEMA, cfg=CFG, rounds=R,
+                            local_steps=2, seed=0, weighting="uniform",
+                            faults=plan, guard=None)
+        assert res.retries == 1
+        np.testing.assert_array_equal(res.blocked, [0, 0, 1, 0])
+        assert all(bool(np.isfinite(np.asarray(l)).all())
+                   for l in jax.tree.leaves(res.final_g_params))
+
+    def test_retry_budget_exhausted_raises_typed_error(self):
+        parts = make_parts()
+        plan = corrupt_nans(jax.random.PRNGKey(3), R, P, clients=[2])
+        with pytest.raises(PoisonedRunError, match="retry budget"):
+            run_federated(parts, SCHEMA, cfg=CFG, rounds=R, local_steps=2,
+                          seed=0, weighting="uniform", faults=plan,
+                          guard=None, max_retries=0)
+
+    def test_plan_shape_mismatch_raises(self):
+        parts = make_parts()
+        with pytest.raises(ValueError, match="FaultPlan"):
+            run_federated(parts, SCHEMA, cfg=CFG, rounds=R, local_steps=1,
+                          seed=0, faults=no_faults(R + 1, P))

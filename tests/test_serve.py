@@ -9,7 +9,7 @@ import pytest
 from repro.gan.ctgan import CTGANConfig
 from repro.gan.trainer import init_gan_state, sample_synthetic
 from repro.kernels import ops
-from repro.serve import (BucketLadder, RequestTooLarge,
+from repro.serve import (BucketLadder, RequestTooLarge, ServerOverloaded,
                          StreamingSynthesizer, TableRegistry,
                          default_ladder, ladder_from_sizes)
 from repro.synth import synthesize_table
@@ -307,6 +307,77 @@ class TestMultiTenant:
         [r] = server.serve()
         assert r.cache_hit and r.decode_dispatches == 1
         registry.unregister("refresh")
+
+
+class _FakeClock:
+    """Deterministic monotonic clock: deadline expiry without sleeps."""
+
+    def __init__(self):
+        self.now = 100.0
+
+    def __call__(self):
+        return self.now
+
+
+class TestGracefulDegradation:
+    """Bounded queue + per-request deadlines: the server sheds load with
+    typed errors and counters instead of growing the queue unboundedly or
+    burning device time on dead requests."""
+
+    def test_bounded_queue_rejects_overload(self, served):
+        ds, enc, cfg, g, registry, _, _ = served
+        server = StreamingSynthesizer(registry, max_queue=2)
+        server.submit("adult", 10, seed=1)
+        server.submit("adult", 10, seed=2)
+        with pytest.raises(ServerOverloaded, match="max_queue"):
+            server.submit("adult", 10, seed=3)
+        assert len(server) == 2            # the rejected request never queued
+        assert server.stats()["rejected_overload"] == 1
+        resps = server.serve()
+        assert [r.rid for r in resps] == [0, 1]
+        # draining freed capacity: submission works again
+        server.submit("adult", 10, seed=4)
+        assert len(server) == 1
+        server.serve()
+
+    def test_expired_requests_dropped_not_served(self, served):
+        ds, enc, cfg, g, registry, _, _ = served
+        clock = _FakeClock()
+        server = StreamingSynthesizer(registry, clock=clock)
+        stale = server.submit("adult", 10, seed=1, deadline=5.0)
+        live = server.submit("adult", 10, seed=2, deadline=60.0)
+        eternal = server.submit("adult", 10, seed=3)   # no deadline
+        clock.now += 10.0                  # past stale's deadline only
+        resps = server.serve()
+        assert [r.rid for r in resps] == [live, eternal]
+        assert stale not in {r.rid for r in resps}
+        stats = server.stats()
+        assert stats["expired"] == 1
+        # expired requests do no generate/decode work
+        assert stats["requests"] == 2
+
+    def test_deadline_met_serves_normally(self, served):
+        ds, enc, cfg, g, registry, _, _ = served
+        clock = _FakeClock()
+        server = StreamingSynthesizer(registry, clock=clock)
+        k = jax.random.PRNGKey(88)
+        server.submit("adult", 64, key=k, deadline=30.0)
+        [resp] = server.serve()
+        oracle = synthesize_table(g, k, cfg, enc, 64)
+        np.testing.assert_array_equal(resp.data, oracle)
+        assert server.stats()["expired"] == 0
+
+    def test_nonpositive_deadline_rejected_at_submit(self, served):
+        ds, enc, cfg, g, registry, _, _ = served
+        server = StreamingSynthesizer(registry)
+        with pytest.raises(ValueError, match="deadline must be positive"):
+            server.submit("adult", 10, deadline=0.0)
+        assert len(server) == 0
+
+    def test_degradation_counters_in_stats(self, served):
+        ds, enc, cfg, g, registry, server, _ = served
+        stats = server.stats()
+        assert {"rejected_overload", "expired"} <= set(stats)
 
 
 class TestPreparePlans:
