@@ -24,9 +24,24 @@ Two comparisons at >=2 client counts on a CI-scale Adult table:
       overhead in wall clock, with the structural assertion that the
       masked merge is STILL one ``weighted_agg`` dispatch per round.
 
-Wired into ``run.py --only fed``.
+  scale — the thousand-client sweep (P in {16, 128, 1024} by default):
+      one base federation tiled out with ``tile_federation``, rounds run
+      through the chunked client axis (``client_chunk``, scan-of-vmap)
+      and the hierarchical clients -> edges -> federator merge
+      (``n_edges``).  Reports per-round wall time, peak live bytes
+      (XLA ``memory_analysis`` temp allocation of the compiled round
+      program), and merge dispatches per round; asserts temp memory is
+      bounded by the chunk budget (sub-linear in P) and that the round
+      body issues exactly one ``weighted_agg`` per tier.
+
+Wired into ``run.py --only fed``; the scale sweep also has a CLI for the
+CI chaos lane's smoke::
+
+    PYTHONPATH=src python -m benchmarks.fed_bench --ps 16,128 --rounds 2
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +50,11 @@ import numpy as np
 from repro.core.aggregation import weighted_average
 from repro.fed import (FederatedProgram, UpdateGuard, byzantine_scale,
                        compose, corrupt_nans, dropout_uniform,
-                       fused_weighted_merge, setup_federation)
+                       fused_weighted_merge, setup_federation,
+                       tile_federation)
 from repro.fed.merge import replicate
 from repro.fed.program import resolve_weights
+from repro.gan.ctgan import CTGANConfig
 from repro.kernels import ops
 from repro.tabular import make_dataset, partition_iid
 
@@ -214,9 +231,133 @@ def bench_merge(P: int = 5) -> dict:
             "us_fused": us_fused, "dispatches": disp}
 
 
+def bench_fed_scale(P_values=(16, 128, 1024), *, rounds: int = 2,
+                    local_steps: int = 1, client_chunk: int = 16,
+                    base_clients: int = 16, n_rows: int = 480,
+                    time_iters: int = 2,
+                    dense_mem_max: int = 128) -> list[dict]:
+    """Thousand-client rounds: chunked client axis + hierarchical merge.
+
+    The §4.1 protocol runs ONCE at ``base_clients``; ``tile_federation``
+    replicates the staged federation out to each P on device (fresh rng
+    streams per tiled client).  Every P runs the same small model with
+    ``client_chunk``-sized scan-of-vmap local rounds and a two-tier
+    ``n_edges = max(P // 32, 2)`` merge.
+
+    The memory receipt comes from XLA ``memory_analysis`` on the
+    compiled round program.  Peak live bytes split into two budgets:
+    the CLIENT budget (every client's params + optimizer moments + the
+    transmitted update stack — O(P) by construction, it is the thing
+    being aggregated) and the ACTIVATION budget (local-training
+    intermediates).  Chunking bounds the second by the chunk, not P:
+    for each P up to ``dense_mem_max`` the dense vmap twin is also
+    compiled, and the sweep asserts the chunked program's marginal
+    temp-bytes-per-client is STRICTLY below dense's — the per-client
+    activation slice is exactly what scan-of-vmap keeps off the peak."""
+    cfg = CTGANConfig(batch_size=16, gen_hidden=(32,), disc_hidden=(32,),
+                      pac=4, z_dim=8)
+    ds = make_dataset("adult", n_rows=n_rows, seed=0)
+    parts = partition_iid(ds, base_clients, seed=0)
+    fe_base = setup_federation(parts, ds.schema, cfg, seed=0,
+                               weighting="fedtgan")
+    records = []
+    for P in P_values:
+        fe = tile_federation(fe_base, P)
+        n_edges = max(P // 32, 2)
+        chunk = min(client_chunk, P)
+        prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
+                                batch=cfg.batch_size,
+                                local_steps=local_steps,
+                                weighting="fedtgan", client_chunk=chunk,
+                                n_edges=n_edges)
+        round_keys = prog.fold_round_keys(jax.random.PRNGKey(0), 0, rounds)
+        args = (fe.states, fe.tables, fe.S, fe.n_rows, round_keys)
+        # dispatch counters fire at trace time -> count during lower()
+        with ops.dispatch_scope() as d:
+            lowered = prog.run.lower(*args)
+        merge_disp = ops.stage_dispatches(d, "weighted_agg")
+        assert merge_disp == 2, \
+            f"round body wants one weighted_agg per tier, got {merge_disp}"
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        temp, argb = mem.temp_size_in_bytes, mem.argument_size_in_bytes
+
+        temp_dense = None
+        if P <= dense_mem_max:       # the memory-only dense twin
+            dense = FederatedProgram(cfg, fe.spans, fe.cond_spans,
+                                     batch=cfg.batch_size,
+                                     local_steps=local_steps,
+                                     weighting="fedtgan")
+            temp_dense = (dense.run.lower(*args).compile()
+                          .memory_analysis().temp_size_in_bytes)
+
+        def run_once(compiled=compiled, args=args):
+            jax.block_until_ready(compiled(*args))
+
+        run_once()                                    # warm
+        times = []
+        for _ in range(time_iters):
+            t0 = time.perf_counter()
+            run_once()
+            times.append(time.perf_counter() - t0)
+        us_round = min(times) * 1e6 / rounds
+        emit(f"fed/scale_P{P}_chunk{chunk}_E{n_edges}", us_round,
+             f"temp_bytes={temp};arg_bytes={argb};"
+             f"dense_temp_bytes={temp_dense};"
+             f"weighted_agg_per_round={merge_disp}")
+        records.append({"clients": P, "chunk": chunk, "edges": n_edges,
+                        "rounds": rounds, "us_per_round": us_round,
+                        "temp_bytes": temp, "arg_bytes": argb,
+                        "temp_bytes_dense": temp_dense,
+                        "weighted_agg_per_round": merge_disp})
+    # The memory contract: chunking keeps the per-client ACTIVATION
+    # slice off the peak.  Marginal temp-bytes-per-client of the chunked
+    # program (pure client state) must be strictly below dense's (client
+    # state + activations); the gap is the activation budget chunking
+    # reclaimed, and it scales with P while the chunked slope does not.
+    measured = [r for r in records if r["temp_bytes_dense"] is not None]
+    if len(measured) >= 2:
+        lo, hi = measured[0], measured[-1]
+        dp = hi["clients"] - lo["clients"]
+        slope_chunk = (hi["temp_bytes"] - lo["temp_bytes"]) / dp
+        slope_dense = (hi["temp_bytes_dense"] - lo["temp_bytes_dense"]) / dp
+        assert slope_chunk < slope_dense, \
+            (f"chunked marginal temp {slope_chunk:.0f} B/client is not "
+             f"below dense {slope_dense:.0f} B/client — chunking is not "
+             f"bounding activation memory")
+        emit("fed/scale_activation_bytes_per_client",
+             slope_dense - slope_chunk,
+             f"slope_chunk={slope_chunk:.0f};slope_dense={slope_dense:.0f}")
+    return records
+
+
 def run_all():
     out = {"merge": bench_merge()}
     # >=2 client counts for the acceptance matrix
     out["rounds"] = [bench_fed_rounds(P) for P in (2, 4)]
     out["faulted"] = bench_faulted_rounds(4)
+    out["scale"] = bench_fed_scale()
     return out
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="fed_bench scale sweep: chunked + hierarchical rounds")
+    ap.add_argument("--ps", default="16,128,1024",
+                    help="comma list of client counts (each a multiple "
+                         "of --base-clients)")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--base-clients", type=int, default=16)
+    ap.add_argument("--rows", type=int, default=480)
+    args = ap.parse_args()
+    bench_fed_scale(tuple(int(p) for p in args.ps.split(",")),
+                    rounds=args.rounds, local_steps=args.local_steps,
+                    client_chunk=args.chunk, base_clients=args.base_clients,
+                    n_rows=args.rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -82,6 +82,8 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                   guard=_AUTO_GUARD,
                   participation: float = 1.0,
                   fedprox_mu: float = 0.0,
+                  client_chunk: int | None = None,
+                  edges: int | None = None,
                   ckpt_dir: str | None = None,
                   resume: bool = False,
                   max_retries: int = 2,
@@ -113,6 +115,14 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     survives) via :func:`~repro.core.fedavg.sample_participation`.
     ``fedprox_mu`` — FedProx proximal pull toward the round's global
     params for the survivors (:func:`~repro.core.fedavg.fedprox_wrap`).
+    ``client_chunk`` — run local rounds as scan-of-vmap chunks of this
+    size (bit-exact vs dense; activation memory fixed per chunk — the
+    large-P rendering).  Works with both programs (the host oracle's
+    client stage goes through the same chunked path).
+    ``edges`` — hierarchical aggregation: merge through this many edge
+    aggregators then the federator, one fused ``weighted_agg`` per tier
+    (ulp-equal to the flat merge).  ``program="fed"`` only — the host
+    oracle keeps the flat per-leaf merge it is the parity baseline for.
     ``ckpt_dir`` — write a checkpoint (states + round cursor + blocklist)
     after every eval chunk; ``resume=True`` restarts from the latest one
     bit-exactly (round keys are absolute).
@@ -124,6 +134,10 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     """
     if program not in ("fed", "host"):
         raise ValueError(f"unknown program {program!r}; options: fed, host")
+    if edges is not None and program != "fed":
+        raise ValueError("hierarchical aggregation (edges=) requires "
+                         "program='fed'; the host oracle keeps the flat "
+                         "per-leaf merge")
     P = len(client_data)
     if guard is _AUTO_GUARD:
         guard = UpdateGuard() if faults is not None else None
@@ -142,7 +156,8 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
                             batch=cfg.batch_size, local_steps=local_steps,
                             weighting=weighting, participation=participation,
-                            fedprox_mu=fedprox_mu, guard=guard)
+                            fedprox_mu=fedprox_mu, guard=guard,
+                            client_chunk=client_chunk, n_edges=edges)
 
     model_bytes = comm_model.pytree_bytes(
         jax.tree.map(lambda x: x[0], (fe.states.g_params, fe.states.d_params)))

@@ -88,13 +88,22 @@ def fedprox_wrap(step_fn, mu: float, lens: Callable = default_lens,
 def sample_participation(weights: jnp.ndarray, key: jax.Array,
                          fraction: float) -> jnp.ndarray:
     """Partial-participation cohort draw: keep each client with prob
-    ``fraction``; the highest-weight client always survives, so a round
-    is never empty.  Returns the (P,) bool keep mask — the form the fed
-    layer's degraded-round path composes with its fault masks before the
-    single renormalize-and-merge."""
+    ``fraction``; if the drawn cohort is EMPTY, one key-chosen rescue
+    client is kept so a round is never empty.  Returns the (P,) bool keep
+    mask — the form the fed layer's degraded-round path composes with its
+    fault masks before the single renormalize-and-merge.
+
+    The rescue only fires on an empty draw (probability ``(1-f)^P``) and
+    picks uniformly from the round key — NOT a fixed client.  The old
+    behavior (always force-keep ``argmax(weights)``) biased the cohort:
+    under uniform/tied weights client 0's effective participation rate
+    was 1.0 instead of ``fraction`` (chi-squared regression in
+    ``tests/test_fedavg_features.py``)."""
     P = weights.shape[0]
-    keep = jax.random.bernoulli(key, fraction, (P,))
-    return keep.at[jnp.argmax(weights)].set(True)   # guarantee non-empty
+    k_keep, k_rescue = jax.random.split(key)
+    keep = jax.random.bernoulli(k_keep, fraction, (P,))
+    rescue = jnp.arange(P) == jax.random.randint(k_rescue, (), 0, P)
+    return jnp.where(jnp.any(keep), keep, rescue)
 
 
 def sample_client_weights(weights: jnp.ndarray, key: jax.Array,

@@ -9,7 +9,13 @@ engine (:mod:`repro.synth`):
 ``FederatedProgram`` — lowers a global round (vmapped local rounds →
     in-program Fig.4 weighting → ONE fused ``weighted_agg`` merge of G+D
     → broadcast) into a single jitted program; ``run`` scans rounds so a
-    whole training run between eval points is one dispatch.
+    whole training run between eval points is one dispatch.  Scale
+    renderings: ``client_chunk`` runs local rounds as scan-of-vmap
+    chunks (bit-exact, activation memory fixed per chunk — the P=1024
+    mode) and ``n_edges`` switches the merge to hierarchical clients →
+    edge aggregators → federator tiers (one fused merge per tier,
+    ulp-equal to flat); ``tile_federation`` stages large-P federations
+    cheaply.
 ``shard_map_global_round`` — the explicit-placement twin for multi-host
     meshes: clients on a mesh axis, merge as one weighted psum.
 ``scenarios`` — the paper's IID / Non-IID partition matrix (iid,
@@ -24,15 +30,19 @@ engine (:mod:`repro.synth`):
 from .faults import (FaultPlan, NoSurvivingClients, PoisonedRunError,
                      UpdateGuard, byzantine_scale, compose, corrupt_nans,
                      dropout_uniform, no_faults, straggler_deadline)
-from .merge import (flatten_stacked, fused_weighted_merge, replicate,
-                    unflatten_merged)
+from .merge import (MergeLayoutError, flatten_stacked, fused_weighted_merge,
+                    replicate, tiered_weighted_merge,
+                    tiered_weighted_merge_flat, unflatten_merged)
 from .program import WEIGHTINGS, FederatedProgram, resolve_weights
-from .setup import Federation, setup_federation
+from .setup import Federation, setup_federation, tile_federation
 from .sharded import shard_map_global_round, shard_map_weighted_round
 
-__all__ = ["flatten_stacked", "fused_weighted_merge", "replicate",
+__all__ = ["MergeLayoutError", "flatten_stacked", "fused_weighted_merge",
+           "replicate", "tiered_weighted_merge",
+           "tiered_weighted_merge_flat",
            "unflatten_merged", "WEIGHTINGS", "FederatedProgram",
            "resolve_weights", "Federation", "setup_federation",
+           "tile_federation",
            "shard_map_global_round", "shard_map_weighted_round",
            "FaultPlan", "NoSurvivingClients", "PoisonedRunError",
            "UpdateGuard", "byzantine_scale", "compose", "corrupt_nans",

@@ -27,7 +27,12 @@ updates.  This module supplies the two halves of surviving that:
   corrupt content cannot perturb the merge by a single ulp, and the
   result equals the survivors-only merge up to XLA's reduction
   association for the compacted shape — the contracts
-  ``tests/test_faults.py`` pins.
+  ``tests/test_faults.py`` pins.  The same sanitize-then-zero-weight
+  masking composes with the hierarchical merge (``n_edges``): each edge
+  tier renormalizes over its surviving members in-kernel, and an edge
+  whose cohort died entirely enters the federator tier with weight zero,
+  so faulted hierarchical rounds stay finite and ulp-close to flat
+  (``tests/test_fed_scale.py``).
 
 Example — a dropout plan is deterministic in its key and always leaves a
 survivor by default:

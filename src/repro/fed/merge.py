@@ -40,11 +40,27 @@ from ..kernels import ops
 PyTree = Any
 
 
+class MergeLayoutError(ValueError):
+    """The flat merge buffer and the reference pytree disagree on layout
+    (total element count or client axis).  Raised instead of silently
+    dropping / misaligning trailing parameters — a truncated unflatten
+    corrupts every leaf after the first mismatch without any numerical
+    signal (the sliced segments are valid floats, just the wrong ones)."""
+
+
 def flatten_stacked(tree: PyTree) -> jnp.ndarray:
     """Concatenate a stacked pytree (leaves ``(P, ...)``) into one
-    ``(P, D)`` float32 buffer — the kernel's input layout."""
+    ``(P, D)`` float32 buffer — the kernel's input layout.  Every leaf
+    must carry the same leading client axis; a mismatched leaf would
+    otherwise reshape client data across rows undetected."""
     leaves = jax.tree_util.tree_flatten(tree)[0]
     P = leaves[0].shape[0]
+    bad = [tuple(l.shape) for l in leaves
+           if l.ndim < 1 or l.shape[0] != P]
+    if bad:
+        raise MergeLayoutError(
+            f"stacked leaves disagree on the client axis: expected "
+            f"leading dim {P}, got leaf shapes {bad}")
     return jnp.concatenate(
         [l.reshape(P, -1).astype(jnp.float32) for l in leaves], axis=1)
 
@@ -52,8 +68,19 @@ def flatten_stacked(tree: PyTree) -> jnp.ndarray:
 def unflatten_merged(flat: jnp.ndarray, tree: PyTree) -> PyTree:
     """Inverse of :func:`flatten_stacked` for the merged ``(D,)`` vector:
     slice per-leaf segments back out and restore shapes/dtypes (shapes
-    come from ``tree``'s leaves minus their client axis)."""
+    come from ``tree``'s leaves minus their client axis).
+
+    The buffer length must equal the tree's layout size exactly —
+    anything else (a stale buffer, a tree/buffer pairing from different
+    models) raises :class:`MergeLayoutError` rather than silently
+    truncating or misaligning trailing parameters."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    total = sum(math.prod(l.shape[1:]) for l in leaves)
+    if flat.ndim != 1 or flat.shape[0] != total:
+        raise MergeLayoutError(
+            f"flat merge buffer has shape {tuple(flat.shape)} but the "
+            f"tree layout needs ({total},): tree/buffer mismatch would "
+            f"silently drop or misalign trailing parameters")
     outs, off = [], 0
     for l in leaves:
         size = math.prod(l.shape[1:])
@@ -80,6 +107,65 @@ def fused_weighted_merge(tree: PyTree, weights: jnp.ndarray, *,
     flat = flatten_stacked(tree)
     merged = ops.weighted_average_flat(flat, weights, use_pallas=use_pallas,
                                        interpret=interpret, block_d=block_d)
+    return unflatten_merged(merged, tree)
+
+
+def tiered_weighted_merge_flat(flat: jnp.ndarray, weights: jnp.ndarray,
+                               n_edges: int, *,
+                               use_pallas: bool | None = None,
+                               interpret: bool | None = None,
+                               block_d: int = 16_384) -> jnp.ndarray:
+    """Hierarchical federator merge: clients → ``n_edges`` edge
+    aggregators → federator, ONE fused ``weighted_agg`` per tier.
+
+    Tier 1 reshapes the ``(P, D)`` stack into ``(E, C, D)`` contiguous
+    edge groups and merges every edge in one batched dispatch
+    (:func:`repro.kernels.ops.weighted_average_edges`); tier 2 merges the
+    ``(E, D)`` edge results under the folded tier weights
+    ``W_e = sum of that edge's client weights``.  Since
+
+        sum_e (W_e / W) * [sum_{p in e} (w_p / W_e) * x_p]
+            = sum_p (w_p / W) * x_p,
+
+    the result is mathematically equal to the flat merge — equal in
+    floats up to the re-associated reduction (ulp-parity asserted in
+    ``tests/test_fed_scale.py``).  Masked renormalization stays
+    in-kernel per tier: an edge whose clients are all zero-weight merges
+    to an exact zero vector AND carries tier weight 0, so it cannot
+    perturb the federator tier (values must already be sanitized, as in
+    the degraded round).  An all-zero weight vector returns zeros — the
+    caller's freeze logic (``wsum > 0``) handles that, same as flat."""
+    P, _ = flat.shape
+    if n_edges < 1 or P % n_edges:
+        raise ValueError(f"n_edges={n_edges} must be >= 1 and divide the "
+                         f"client count P={P}")
+    C = P // n_edges
+    edge_merged = ops.weighted_average_edges(
+        flat.reshape(n_edges, C, -1), weights.reshape(n_edges, C),
+        use_pallas=use_pallas, interpret=interpret, block_d=block_d)
+    tier_w = jnp.sum(weights.reshape(n_edges, C), axis=1)
+    # a fully-masked edge merges to zeros/max(0, eps) inside the kernel
+    # but could still carry garbage if callers skipped sanitization;
+    # zero it explicitly so tier weights of 0 mean an exact +0.0.
+    edge_safe = jnp.where((tier_w > 0)[:, None], edge_merged, 0.0)
+    return ops.weighted_average_flat(edge_safe, tier_w,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret, block_d=block_d)
+
+
+def tiered_weighted_merge(tree: PyTree, weights: jnp.ndarray,
+                          n_edges: int, *,
+                          use_pallas: bool | None = None,
+                          interpret: bool | None = None,
+                          block_d: int = 16_384) -> PyTree:
+    """Pytree twin of :func:`tiered_weighted_merge_flat` — the
+    hierarchical drop-in for :func:`fused_weighted_merge` (same
+    flatten/scatter framing, two ``weighted_agg`` dispatches instead of
+    one)."""
+    flat = flatten_stacked(tree)
+    merged = tiered_weighted_merge_flat(flat, weights, n_edges,
+                                        use_pallas=use_pallas,
+                                        interpret=interpret, block_d=block_d)
     return unflatten_merged(merged, tree)
 
 

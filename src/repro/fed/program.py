@@ -68,8 +68,9 @@ from ..synth import RoundEngine, SamplerTables
 from ..tabular.encoders import SpanInfo
 from .faults import (FaultPlan, UpdateGuard, apply_faults, guard_ok,
                      update_diagnostics)
-from .merge import flatten_stacked, fused_weighted_merge, replicate, \
-    unflatten_merged
+from .merge import (flatten_stacked, fused_weighted_merge, replicate,
+                    tiered_weighted_merge, tiered_weighted_merge_flat,
+                    unflatten_merged)
 
 WEIGHTINGS = ("fedtgan", "uniform", "quantity")
 
@@ -119,18 +120,33 @@ class FederatedProgram:
                  interpret: bool | None = None,
                  participation: float = 1.0,
                  fedprox_mu: float = 0.0,
-                 guard: UpdateGuard | None = None):
+                 guard: UpdateGuard | None = None,
+                 client_chunk: int | None = None,
+                 n_edges: int | None = None):
         if weighting not in WEIGHTINGS:
             raise ValueError(f"unknown weighting {weighting!r}; "
                              f"options: {WEIGHTINGS}")
         if not 0.0 < participation <= 1.0:
             raise ValueError(f"participation must be in (0, 1], "
                              f"got {participation}")
+        if client_chunk is not None and client_chunk < 1:
+            raise ValueError(f"client_chunk must be >= 1, "
+                             f"got {client_chunk}")
+        if n_edges is not None and n_edges < 1:
+            raise ValueError(f"n_edges must be >= 1, got {n_edges}")
         self.cfg = cfg
         self.weighting = weighting
         self.participation = float(participation)
         self.fedprox_mu = float(fedprox_mu)
         self.guard = guard
+        # Scale renderings (see docs/FEDERATION.md "Scaling to thousands
+        # of clients"): client_chunk switches local rounds to
+        # scan-of-vmap chunks (bit-exact, fixed activation memory);
+        # n_edges switches the merge to the two-tier clients → edges →
+        # federator form (ulp-equal to the flat merge, one fused
+        # weighted_agg per tier).
+        self.client_chunk = client_chunk
+        self.n_edges = n_edges
         if engine is None:
             step_fn = None
             if self.fedprox_mu > 0:
@@ -154,24 +170,31 @@ class FederatedProgram:
 
     def merge_states(self, states: GANState, w: jnp.ndarray) -> GANState:
         """Federator merge + redistribution: G and D parameters flattened
-        into ONE ``weighted_agg`` dispatch, then broadcast back onto the
-        client axis.  Optimizer moments stay local (the paper aggregates
-        model parameters only)."""
+        into ONE ``weighted_agg`` dispatch (one per tier under
+        hierarchical aggregation), then broadcast back onto the client
+        axis.  Optimizer moments stay local (the paper aggregates model
+        parameters only)."""
         P = w.shape[0]
-        merged = fused_weighted_merge(
-            {"g": states.g_params, "d": states.d_params}, w, **self._merge_kw)
+        tree = {"g": states.g_params, "d": states.d_params}
+        if self.n_edges is None:
+            merged = fused_weighted_merge(tree, w, **self._merge_kw)
+        else:
+            merged = tiered_weighted_merge(tree, w, self.n_edges,
+                                           **self._merge_kw)
         return states._replace(g_params=replicate(merged["g"], P),
                                d_params=replicate(merged["d"], P))
 
     def _clients(self, states: GANState, tables: SamplerTables,
                  key: jax.Array):
-        """Vmapped local rounds, with the round's global params threaded
+        """Vmapped local rounds (chunked scan-of-vmap when
+        ``client_chunk`` is set), with the round's global params threaded
         in as the FedProx anchor when drift control is on (every client's
         pre-round params ARE the broadcast global model)."""
         P = jax.tree.leaves(states.g_params)[0].shape[0]
         aux = _gan_lens(states) if self.fedprox_mu > 0 else None
         return self.engine.clients_round(states, tables,
-                                         jax.random.split(key, P), aux)
+                                         jax.random.split(key, P), aux,
+                                         client_chunk=self.client_chunk)
 
     def weighted_round(self, states: GANState, tables: SamplerTables,
                        w: jnp.ndarray, key: jax.Array):
@@ -249,8 +272,16 @@ class FederatedProgram:
         w_eff = w * ok
         wsum = jnp.sum(w_eff)
         flat_safe = jnp.where(ok[:, None], flat, 0.0)
-        merged = ops.weighted_average_flat(flat_safe, w_eff,
-                                           **self._merge_kw)
+        if self.n_edges is None:
+            merged = ops.weighted_average_flat(flat_safe, w_eff,
+                                               **self._merge_kw)
+        else:
+            # same mask + renormalize math, folded tier-wise: a fully
+            # masked edge carries tier weight 0 and exact-zero values,
+            # so in-kernel renormalization still happens per tier.
+            merged = tiered_weighted_merge_flat(flat_safe, w_eff,
+                                                self.n_edges,
+                                                **self._merge_kw)
         merged = jnp.where(wsum > 0, merged, prev_flat[0])
         out = unflatten_merged(merged, tree)
         states = states._replace(g_params=replicate(out["g"], P),
@@ -292,6 +323,11 @@ class FederatedProgram:
         """The simulation drivers' round-key stream — ``fold_in(key, r)``
         for absolute round indices ``start..stop-1`` — stacked for
         ``run``.  Using the same stream is what makes the one-program
-        path bit-comparable to the per-round host loop."""
-        return jnp.stack([jax.random.fold_in(key, r)
-                          for r in range(start, stop)])
+        path bit-comparable to the per-round host loop.
+
+        Vectorized as ONE ``vmap(fold_in)`` over the round index range:
+        the old per-round Python loop was O(R) host dispatches, which
+        dominated setup at the R needed for P=1024 sweeps.  Bit-exact
+        against the loop (regression in ``tests/test_fed_scale.py``)."""
+        return jax.vmap(lambda r: jax.random.fold_in(key, r))(
+            jnp.arange(start, stop))

@@ -130,11 +130,17 @@ def run_matrix(datasets=("adult",), scenarios=("iid", "dirichlet", "quantity"),
                weightings=("fedtgan", "uniform"), faults=("none",), *,
                n_clients: int = 3, rows: int = 600, rounds: int = 2,
                local_steps: int = 1, cfg: CTGANConfig | None = None,
-               seed: int = 0, eval_samples: int = 512) -> list[dict]:
+               seed: int = 0, eval_samples: int = 512,
+               client_chunk: int | None = None,
+               edges: int | None = None) -> list[dict]:
     """Cross datasets x scenarios x weighting modes x fault regimes
     through the one-program engine; returns one record per cell (final
     similarity metrics, resolved client weights, and — for faulted cells
-    — the fault summary, retry count, and a host-side finiteness flag)."""
+    — the fault summary, retry count, and a host-side finiteness flag).
+
+    ``client_chunk`` / ``edges`` select the scale renderings (chunked
+    client axis, hierarchical two-tier merge) for every cell — the CI
+    chaos lane uses them to smoke the large-P paths at small P."""
     from ..core.architectures import run_federated   # lazy: avoids cycle
     from ..tabular import make_dataset
     cfg = cfg or CTGANConfig(batch_size=60, gen_hidden=(32, 32),
@@ -157,6 +163,8 @@ def run_matrix(datasets=("adult",), scenarios=("iid", "dirichlet", "quantity"),
                                         eval_every=rounds,
                                         eval_samples=eval_samples,
                                         faults=plan,
+                                        client_chunk=client_chunk,
+                                        edges=edges,
                                         name=f"{d}/{sc}/{wmode}/{fname}")
                     final = res.history[-1]
                     finite = all(
@@ -193,6 +201,12 @@ def main():
     ap.add_argument("--rows", type=int, default=600)
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--client-chunk", type=int, default=None,
+                    help="run local rounds as scan-of-vmap chunks of this "
+                         "size (must divide --clients)")
+    ap.add_argument("--edges", type=int, default=None,
+                    help="hierarchical merge through this many edge "
+                         "aggregators (must divide --clients)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="optional JSON output path")
     args = ap.parse_args()
@@ -203,6 +217,7 @@ def main():
                       faults=args.faults.split(","),
                       n_clients=args.clients, rows=args.rows,
                       rounds=args.rounds, local_steps=args.local_steps,
+                      client_chunk=args.client_chunk, edges=args.edges,
                       seed=args.seed)
     print(f"{'dataset':10s} {'scenario':10s} {'weighting':9s} "
           f"{'faults':9s} {'avg_jsd':>8s} {'avg_wd':>8s} "

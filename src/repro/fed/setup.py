@@ -65,6 +65,40 @@ class Federation:
         return build_fault_plan(regime, rounds, self.n_clients, seed=seed)
 
 
+def tile_federation(fe: Federation, P: int) -> Federation:
+    """Replicate a staged federation's client axis out to ``P`` clients.
+
+    The §4.1 protocol cost (per-client stats, VGM fits, encoders,
+    encoding) is paid once at the base federation's size; states, sampler
+    tables, divergence rows, and row counts tile on device — which is how
+    the P=1024 ``fed_bench`` sweeps stage thousand-client rounds without
+    a thousand host-side encoder fits.  Tiled clients get FRESH per-slice
+    rng streams (``fold_in`` of the federator model key by client index,
+    matching ``setup_federation``'s layout), so replicas do not draw in
+    lockstep.  ``P`` must be a multiple of the base client count."""
+    base = fe.n_clients
+    if P < base or P % base:
+        raise ValueError(f"P={P} must be a positive multiple of the base "
+                         f"client count {base}")
+    if P == base:
+        return fe
+    reps = P // base
+
+    def tile(t):
+        return jax.tree.map(
+            lambda x: jnp.tile(x, (reps,) + (1,) * (x.ndim - 1)), t)
+
+    states = tile(fe.states)
+    rng0 = fe.states.rng[0]
+    states = states._replace(
+        rng=jax.vmap(lambda i: jax.random.fold_in(rng0, i))(jnp.arange(P)))
+    n_rows = jnp.tile(fe.n_rows, reps)
+    S = jnp.tile(fe.S, (reps, 1))
+    w = jax.jit(resolve_weights, static_argnums=0)(fe.weighting, S, n_rows)
+    return dataclasses.replace(fe, tables=tile(fe.tables), states=states,
+                               S=S, n_rows=n_rows, weights=w)
+
+
 def setup_federation(client_data: list[np.ndarray], schema: list[ColumnSpec],
                      cfg: CTGANConfig, seed: int,
                      weighting: str = "fedtgan") -> Federation:

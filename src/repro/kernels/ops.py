@@ -34,6 +34,10 @@ _vgm_decode_table_ref = jax.jit(ref.vgm_decode_table_ref)
 # both routes must see identical XLA contraction decisions.
 _weighted_agg_ref = jax.jit(ref.weighted_agg_ref)
 
+# Batched (per-edge) twins for the hierarchical merge tier: one vmapped
+# kernel/oracle call merges every edge aggregator's stack at once.
+_weighted_agg_edges_ref = jax.jit(jax.vmap(ref.weighted_agg_ref))
+
 # Host-level kernel dispatch counter (per wrapper call); benchmarks use it
 # to prove the fused encode path issues ONE dispatch where the per-column
 # loop issues Q_cont.  Reset with ``DISPATCH_COUNTS.clear()``.
@@ -226,6 +230,29 @@ def weighted_average_flat(stacked, weights, *, use_pallas=None,
     DISPATCH_COUNTS["weighted_agg"] += 1
     interp = (not _ON_TPU) if interpret is None else interpret
     return _weighted_agg(stacked, weights, block_d=block_d, interpret=interp)
+
+
+def weighted_average_edges(stacked, weights, *, use_pallas=None,
+                           interpret=None, block_d=16_384):
+    """Edge tier of the hierarchical federator merge: (E, C, D) per-edge
+    client stacks x (E, C) weights -> (E, D) per-edge merged vectors, ALL
+    edges in ONE dispatch (the kernel vmapped over the edge axis; same
+    in-kernel defensive normalization per edge — an all-zero edge merges
+    to exact zeros).
+
+    ``use_pallas=None`` auto-routes like :func:`weighted_average_flat`,
+    and the call counts ONCE toward the one-merge-dispatch-per-tier
+    contract (``weighted_agg`` / ``weighted_agg_ref``)."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU or interpret is not None
+    if not use_pallas:
+        DISPATCH_COUNTS["weighted_agg_ref"] += 1
+        return _weighted_agg_edges_ref(stacked, weights)
+    DISPATCH_COUNTS["weighted_agg"] += 1
+    interp = (not _ON_TPU) if interpret is None else interpret
+    return jax.vmap(
+        lambda s, w: _weighted_agg(s, w, block_d=block_d,
+                                   interpret=interp))(stacked, weights)
 
 
 def weighted_average_tree(stacked_tree, weights, **kw):

@@ -103,17 +103,54 @@ class RoundEngine:
         return jax.lax.scan(body, state, batches)
 
     def clients_round(self, states: GANState, tables: SamplerTables,
-                      keys: jax.Array, aux=None):
+                      keys: jax.Array, aux=None, *,
+                      client_chunk: int | None = None):
         """All clients' local rounds "in parallel": ``local_round``
         vmapped over the stacked client axis (states/tables from
         ``stack_sampler_tables``, one key per client).  Pure and
         un-jitted like ``local_round`` — the fed layer composes it with
         the weighted merge inside ONE jitted global round
         (:class:`repro.fed.FederatedProgram`).  ``aux`` (if given) is a
-        stacked pytree vmapped alongside the states."""
-        if aux is None:
-            return jax.vmap(self.local_round)(states, tables, keys)
-        return jax.vmap(self.local_round)(states, tables, keys, aux)
+        stacked pytree vmapped alongside the states.
+
+        ``client_chunk`` switches the dense vmap to scan-of-vmap: the
+        client axis is reshaped into ``(P/chunk, chunk)`` and
+        ``lax.map`` runs one vmapped chunk at a time, so the round's
+        LIVE activation memory is proportional to ``chunk`` instead of
+        ``P`` — the rendering that makes P=1024 fit.  Per-client math
+        is untouched (each client's ops never mix across the vmap
+        axis), so chunked output is BIT-identical to the dense vmap
+        (``tests/test_fed_scale.py``); the chunk size must divide P."""
+        P = keys.shape[0]
+        if client_chunk is None or client_chunk >= P:
+            if aux is None:
+                return jax.vmap(self.local_round)(states, tables, keys)
+            return jax.vmap(self.local_round)(states, tables, keys, aux)
+        if client_chunk < 1 or P % client_chunk:
+            raise ValueError(f"client_chunk={client_chunk} must be >= 1 "
+                             f"and divide the client count P={P}")
+        n_chunks = P // client_chunk
+
+        def chunk(t):
+            return jax.tree.map(
+                lambda x: x.reshape(n_chunks, client_chunk, *x.shape[1:]), t)
+
+        def unchunk(t):
+            return jax.tree.map(
+                lambda x: x.reshape(P, *x.shape[2:]), t)
+
+        def one_chunk(args):
+            if aux is None:
+                st, tb, k = args
+                return jax.vmap(self.local_round)(st, tb, k)
+            st, tb, k, ax = args
+            return jax.vmap(self.local_round)(st, tb, k, ax)
+
+        xs = (chunk(states), chunk(tables), chunk(keys))
+        if aux is not None:
+            xs = xs + (chunk(aux),)
+        out_states, metrics = jax.lax.map(one_chunk, xs)
+        return unchunk(out_states), unchunk(metrics)
 
     def run(self, state: GANState, tables: SamplerTables, key: jax.Array,
             rounds: int):

@@ -1,0 +1,373 @@
+"""Thousand-client scale renderings: chunked client axis (scan-of-vmap,
+bit-exact vs dense vmap), hierarchical clients -> edges -> federator
+merge (one fused dispatch per tier, ulp-equal to flat), the vectorized
+round-key stream, federation tiling, and the merge-layout error
+contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.architectures import run_federated
+from repro.fed import (FederatedProgram, MergeLayoutError, UpdateGuard,
+                       byzantine_scale, compose, corrupt_nans,
+                       dropout_uniform, fused_weighted_merge,
+                       setup_federation, tile_federation,
+                       tiered_weighted_merge, tiered_weighted_merge_flat)
+from repro.fed.merge import flatten_stacked, unflatten_merged
+from repro.gan.ctgan import CTGANConfig
+from repro.kernels import ops
+from repro.tabular import ColumnSpec
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+CFG = CTGANConfig(batch_size=8, gen_hidden=(16,), disc_hidden=(16,),
+                  pac=2, z_dim=4)
+SCHEMA = [ColumnSpec("x", "continuous", max_modes=2),
+          ColumnSpec("c", "categorical")]
+
+
+def make_parts(n=4, rows=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.stack([rng.normal(size=rows),
+                      rng.integers(0, 3, rows)], 1) for _ in range(n)]
+
+
+def _tree_equal(a, b):
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _assert_ulp_close(a, b, rtol=3e-6, atol=1e-7):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def chaos_plan(rounds, P, seed=7):
+    k = jax.random.PRNGKey(seed)
+    return compose(
+        dropout_uniform(k, rounds, P, rate=0.3),
+        corrupt_nans(jax.random.fold_in(k, 1), rounds, P, n_corrupt=1),
+        byzantine_scale(jax.random.fold_in(k, 2), rounds, P,
+                        n_byzantine=1, scale=64.0)).validate()
+
+
+@pytest.fixture(scope="module")
+def fed16():
+    """A P=16 federation, staged at 4 clients and tiled on device."""
+    fe = setup_federation(make_parts(4), SCHEMA, CFG, seed=0,
+                          weighting="fedtgan")
+    return tile_federation(fe, 16)
+
+
+def prog16(fe, **kw):
+    kw.setdefault("weighting", "fedtgan")
+    return FederatedProgram(CFG, fe.spans, fe.cond_spans,
+                            batch=CFG.batch_size, local_steps=1, **kw)
+
+
+class TestChunkedClients:
+    """client_chunk scan-of-vmap must be BIT-exact vs the dense vmap."""
+
+    @pytest.mark.parametrize("chunk", [1, 4, 16])
+    def test_round_bit_exact_vs_dense(self, fed16, chunk):
+        fe = fed16
+        dense = prog16(fe)
+        chunked = prog16(fe, client_chunk=chunk)
+        key = jax.random.PRNGKey(2)
+        st_d, m_d = dense.round(fe.states, fe.tables, fe.S, fe.n_rows, key)
+        st_c, m_c = chunked.round(fe.states, fe.tables, fe.S, fe.n_rows, key)
+        assert _tree_equal(st_d, st_c)          # params, moments, rng — all
+        if chunk == 1:
+            # size-1 batch dims let XLA fold one loss reduction
+            # differently (observed: a single ulp in the wgan metric);
+            # the STATES above are still bit-equal
+            _assert_ulp_close(m_d, m_c, rtol=1e-6, atol=1e-7)
+        else:
+            assert _tree_equal(m_d, m_c)
+
+    def test_oversized_chunk_is_dense(self, fed16):
+        fe = fed16
+        st_d, _ = prog16(fe).round(fe.states, fe.tables, fe.S, fe.n_rows,
+                                   jax.random.PRNGKey(3))
+        st_c, _ = prog16(fe, client_chunk=64).round(
+            fe.states, fe.tables, fe.S, fe.n_rows, jax.random.PRNGKey(3))
+        assert _tree_equal(st_d, st_c)
+
+    def test_indivisible_chunk_raises(self, fed16):
+        fe = fed16
+        with pytest.raises(ValueError, match="divide"):
+            prog16(fe, client_chunk=3).round(
+                fe.states, fe.tables, fe.S, fe.n_rows, jax.random.PRNGKey(0))
+
+    def test_fedprox_chunked_bit_exact(self, fed16):
+        """The aux (FedProx anchor) threads through the chunk reshape."""
+        fe = fed16
+        key = jax.random.PRNGKey(4)
+        st_d, m_d = prog16(fe, fedprox_mu=0.1).round(
+            fe.states, fe.tables, fe.S, fe.n_rows, key)
+        st_c, m_c = prog16(fe, fedprox_mu=0.1, client_chunk=4).round(
+            fe.states, fe.tables, fe.S, fe.n_rows, key)
+        assert _tree_equal(st_d, st_c)
+        assert _tree_equal(m_d, m_c)
+
+    def test_faulted_run_chunked_ulp_close(self, fed16):
+        """Chunking only reshapes local training; the fault masks, the
+        guard, and the masked merge see identical transmitted stacks.
+        Across a SCANNED multi-round program XLA may re-fuse ops around
+        the lax.map boundary and refold an fma by ulps (observed 7e-12
+        on one batchnorm leaf), so the whole-run contract is ulp
+        closeness; single-round programs are bit-equal (above).  The
+        guard/mask decisions must still agree exactly."""
+        fe = fed16
+        R = 2
+        plan = chaos_plan(R, 16)
+        keys = FederatedProgram.fold_round_keys(jax.random.PRNGKey(5), 0, R)
+        st_d, m_d = prog16(fe, guard=UpdateGuard()).run_faulted(
+            fe.states, fe.tables, fe.S, fe.n_rows, keys, plan)
+        st_c, m_c = prog16(fe, guard=UpdateGuard(),
+                           client_chunk=4).run_faulted(
+            fe.states, fe.tables, fe.S, fe.n_rows, keys, plan)
+        for k in ("client_ok", "client_suspect", "merged"):
+            assert bool(jnp.array_equal(m_d[k], m_c[k])), k
+        _assert_ulp_close(st_d, st_c, rtol=1e-6, atol=1e-8)
+        _assert_ulp_close(m_d, m_c, rtol=1e-6, atol=1e-8)
+
+
+class TestTieredMerge:
+    """clients -> E edges -> federator == the flat merge, tier weights
+    folded per §4.2 (ulp tolerance: two reduction shapes)."""
+
+    @pytest.mark.parametrize("E", [1, 2, 4, 8, 16])
+    def test_flat_parity_across_tier_shapes(self, key, E):
+        P, D = 16, 777
+        ka, kb = jax.random.split(key)
+        flat = jax.random.normal(ka, (P, D), jnp.float32)
+        w = jax.random.uniform(kb, (P,), jnp.float32) + 0.1
+        got = jax.jit(lambda f, w: tiered_weighted_merge_flat(f, w, E))(
+            flat, w)
+        expect = jax.jit(ops.weighted_average_flat)(flat, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                                   rtol=3e-6, atol=1e-6)
+
+    def test_tree_parity_vs_fused(self, key):
+        P = 8
+        ks = jax.random.split(key, 3)
+        tree = {"g": {"w": jax.random.normal(ks[0], (P, 6, 10)),
+                      "b": jax.random.normal(ks[1], (P, 10))},
+                "d": jax.random.normal(ks[2], (P, 5))}
+        w = jnp.arange(1.0, P + 1.0)
+        got = jax.jit(lambda t, w: tiered_weighted_merge(t, w, 4))(tree, w)
+        expect = jax.jit(fused_weighted_merge)(tree, w)
+        _assert_ulp_close(got, expect, atol=1e-6)
+
+    @pytest.mark.parametrize("E", [0, 3, 32])
+    def test_invalid_edge_count_raises(self, key, E):
+        flat = jax.random.normal(key, (16, 8))
+        with pytest.raises(ValueError):
+            tiered_weighted_merge_flat(flat, jnp.ones((16,)), E)
+
+    def test_dead_edge_stays_finite_and_matches_flat(self, key):
+        """An edge whose whole cohort is masked out enters the federator
+        tier with weight 0 and exact-zero values: no NaN, and the result
+        still equals the flat masked merge of the survivors."""
+        P, D, E = 16, 300, 4
+        flat = jax.random.normal(key, (P, D), jnp.float32)
+        w = jnp.ones((P,)).at[4:8].set(0.0)        # edge 1 fully dead
+        safe = jnp.where((w > 0)[:, None], flat, 0.0)
+        got = tiered_weighted_merge_flat(safe, w, E)
+        expect = ops.weighted_average_flat(safe, w)
+        assert bool(jnp.all(jnp.isfinite(got)))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                                   rtol=3e-6, atol=1e-6)
+
+
+class TestHierarchicalRound:
+    """The in-program hierarchical merge vs the flat program at P=16."""
+
+    @pytest.mark.parametrize("weighting", ["fedtgan", "uniform", "quantity"])
+    def test_round_parity_vs_flat(self, fed16, weighting):
+        fe = fed16
+        key = jax.random.PRNGKey(6)
+        st_f, m_f = prog16(fe, weighting=weighting).round(
+            fe.states, fe.tables, fe.S, fe.n_rows, key)
+        st_h, m_h = prog16(fe, weighting=weighting, n_edges=4).round(
+            fe.states, fe.tables, fe.S, fe.n_rows, key)
+        assert _tree_equal(m_f, m_h)         # metrics precede the merge
+        _assert_ulp_close(st_f.g_params, st_h.g_params)
+        _assert_ulp_close(st_f.d_params, st_h.d_params)
+
+    def test_faulted_round_parity_chaos(self, fed16):
+        """One chaos round, chunked + hierarchical vs dense + flat: the
+        masked tier-wise renormalization lands within merge-ulp of the
+        flat masked merge, and metrics (pre-merge) are bit-equal."""
+        fe = fed16
+        plan = chaos_plan(1, 16)
+        keys = FederatedProgram.fold_round_keys(jax.random.PRNGKey(8), 0, 1)
+        st_f, m_f = prog16(fe, guard=UpdateGuard()).run_faulted(
+            fe.states, fe.tables, fe.S, fe.n_rows, keys, plan)
+        st_h, m_h = prog16(fe, guard=UpdateGuard(), client_chunk=4,
+                           n_edges=4).run_faulted(
+            fe.states, fe.tables, fe.S, fe.n_rows, keys, plan)
+        for k in ("client_ok", "update_norm", "w_eff", "merged"):
+            assert bool(jnp.array_equal(m_f[k], m_h[k])), k
+        _assert_ulp_close(st_f.g_params, st_h.g_params)
+        _assert_ulp_close(st_f.d_params, st_h.d_params)
+
+    def test_faulted_multiround_stays_close_and_finite(self, fed16):
+        """Ulp merge differences compound through GAN rounds; over a
+        short chaos stretch the hierarchical run must stay finite and
+        near the flat run."""
+        fe = fed16
+        R = 3
+        plan = chaos_plan(R, 16)
+        keys = FederatedProgram.fold_round_keys(jax.random.PRNGKey(9), 0, R)
+        st_f, _ = prog16(fe, guard=UpdateGuard()).run_faulted(
+            fe.states, fe.tables, fe.S, fe.n_rows, keys, plan)
+        st_h, _ = prog16(fe, guard=UpdateGuard(), client_chunk=4,
+                         n_edges=4).run_faulted(
+            fe.states, fe.tables, fe.S, fe.n_rows, keys, plan)
+        assert all(bool(jnp.all(jnp.isfinite(l)))
+                   for l in jax.tree.leaves((st_h.g_params, st_h.d_params)))
+        # measured drift after 3 chaos rounds: ~7e-5 abs / 5e-3 rel
+        # (near-zero params); 10x headroom against refold noise
+        _assert_ulp_close(st_f.g_params, st_h.g_params,
+                          rtol=5e-2, atol=5e-4)
+
+
+class TestDispatchRegression:
+    """One fused weighted_agg per merge tier per round body — flat round
+    = 1, hierarchical = 2 (edges + federator), chunking changes nothing."""
+
+    def cases(self, fe):
+        return [(prog16(fe), 1), (prog16(fe, client_chunk=4), 1),
+                (prog16(fe, n_edges=4), 2),
+                (prog16(fe, client_chunk=4, n_edges=4), 2)]
+
+    def test_dense_round_dispatches(self, fed16):
+        fe = fed16
+        for prog, expect in self.cases(fe):
+            with ops.dispatch_scope() as d:
+                prog.round(fe.states, fe.tables, fe.S, fe.n_rows,
+                           jax.random.PRNGKey(0))
+            got = ops.stage_dispatches(d, "weighted_agg")
+            assert got == expect, (prog.client_chunk, prog.n_edges, got)
+
+    def test_faulted_scan_dispatches(self, fed16):
+        fe = fed16
+        plan = chaos_plan(2, 16)
+        keys = FederatedProgram.fold_round_keys(jax.random.PRNGKey(1), 0, 2)
+        for n_edges, expect in [(None, 1), (4, 2)]:
+            prog = prog16(fe, guard=UpdateGuard(), n_edges=n_edges)
+            with ops.dispatch_scope() as d:
+                prog.run_faulted(fe.states, fe.tables, fe.S, fe.n_rows,
+                                 keys, plan)
+            got = ops.stage_dispatches(d, "weighted_agg")
+            assert got == expect, (n_edges, got)
+
+
+class TestMergeLayout:
+    """flatten/unflatten round-trip + the typed layout-mismatch error
+    (a truncated or reshaped merge result must never silently truncate
+    the model it is scattered back into)."""
+
+    def tree(self, key, P=3):
+        ks = jax.random.split(key, 3)
+        return {"a": jax.random.normal(ks[0], (P, 4, 5)),
+                "b": jax.random.normal(ks[1], (P, 7)),
+                "c": jax.random.normal(ks[2], (P,))}
+
+    def test_round_trip_identity(self, key):
+        tree = self.tree(key)
+        flat = flatten_stacked(tree)
+        assert flat.shape == (3, 4 * 5 + 7 + 1)
+        out = unflatten_merged(flat[0], tree)
+        assert _tree_equal(out, jax.tree.map(lambda x: x[0], tree))
+
+    def test_truncated_flat_raises(self, key):
+        tree = self.tree(key)
+        flat = flatten_stacked(tree)[0]
+        with pytest.raises(MergeLayoutError, match="28"):
+            unflatten_merged(flat[:-1], tree)
+
+    def test_wrong_rank_raises(self, key):
+        tree = self.tree(key)
+        with pytest.raises(MergeLayoutError):
+            unflatten_merged(flatten_stacked(tree), tree)   # (P, D) not (D,)
+
+    def test_ragged_client_axis_raises(self, key):
+        tree = {"a": jax.random.normal(key, (3, 4)),
+                "b": jax.random.normal(key, (2, 4))}
+        with pytest.raises(MergeLayoutError):
+            flatten_stacked(tree)
+
+    def test_error_is_a_value_error(self):
+        assert issubclass(MergeLayoutError, ValueError)
+
+
+class TestFoldRoundKeys:
+    def test_bit_exact_vs_loop(self):
+        key = jax.random.PRNGKey(123)
+        got = FederatedProgram.fold_round_keys(key, 3, 11)
+        expect = jnp.stack([jax.random.fold_in(key, r)
+                            for r in range(3, 11)])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    def test_empty_range(self):
+        got = FederatedProgram.fold_round_keys(jax.random.PRNGKey(0), 4, 4)
+        assert got.shape[0] == 0
+
+
+class TestTileFederation:
+    def test_tiles_tables_and_recomputes_weights(self):
+        fe = setup_federation(make_parts(4), SCHEMA, CFG, seed=0,
+                              weighting="fedtgan")
+        big = tile_federation(fe, 12)
+        assert big.n_clients == 12
+        assert big.S.shape == (12, fe.S.shape[1])
+        np.testing.assert_array_equal(np.asarray(big.n_rows),
+                                      np.tile(np.asarray(fe.n_rows), 3))
+        assert big.weights.shape == (12,)
+        np.testing.assert_allclose(float(big.weights.sum()), 1.0, atol=1e-5)
+
+    def test_fresh_rng_streams(self):
+        """Tiled replicas must not draw in lockstep with their source."""
+        fe = setup_federation(make_parts(2), SCHEMA, CFG, seed=0,
+                              weighting="uniform")
+        big = tile_federation(fe, 8)
+        rngs = np.asarray(big.states.rng)
+        assert len({tuple(r) for r in rngs.reshape(8, -1)}) == 8
+
+    def test_identity_and_errors(self):
+        fe = setup_federation(make_parts(2), SCHEMA, CFG, seed=0,
+                              weighting="uniform")
+        assert tile_federation(fe, 2) is fe
+        with pytest.raises(ValueError):
+            tile_federation(fe, 3)
+        with pytest.raises(ValueError):
+            tile_federation(fe, 0)
+
+
+class TestRunFederatedPlumbing:
+    """client_chunk / edges through the run_federated entry point."""
+
+    def test_fed_scale_knobs_match_dense(self):
+        parts = make_parts(4, rows=32, seed=1)
+        kw = dict(cfg=CFG, rounds=2, local_steps=1, seed=1,
+                  weighting="uniform")
+        dense = run_federated(parts, SCHEMA, program="fed", **kw)
+        scaled = run_federated(parts, SCHEMA, program="fed",
+                               client_chunk=2, edges=2, **kw)
+        # two GAN rounds compound the tiered merge's reduction-order
+        # ulps (measured ~1e-3 rel on near-zero params)
+        for a, b in zip(jax.tree.leaves(dense.final_g_params),
+                        jax.tree.leaves(scaled.final_g_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-2, atol=5e-4)
+
+    def test_host_program_rejects_edges(self):
+        parts = make_parts(2)
+        with pytest.raises(ValueError, match="edges"):
+            run_federated(parts, SCHEMA, program="host", cfg=CFG,
+                          rounds=1, local_steps=1, seed=0, edges=2)

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 from typing import NamedTuple
 
 from repro.core.fedavg import (default_lens, default_merge, fedprox_wrap,
-                               make_federated_round, sample_client_weights)
+                               make_federated_round, sample_client_weights,
+                               sample_participation)
 
 
 class St(NamedTuple):
@@ -57,6 +58,44 @@ class TestClientSampling:
         w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
         out = sample_client_weights(w, key, 1.0)
         np.testing.assert_allclose(np.asarray(out), np.asarray(w), rtol=1e-6)
+
+
+class TestParticipationBias:
+    """Regression for the force-keep bias: the old draw always kept
+    ``argmax(weights)``, so under tied weights client 0 participated at
+    rate 1.0 instead of ``fraction``.  The fixed draw rescues a
+    key-chosen client ONLY on an empty cohort."""
+
+    def test_per_client_rates_chi_squared(self):
+        P, n, frac = 8, 4000, 0.5
+        w = jnp.full((P,), 1.0 / P)          # tied weights: the bias case
+        keys = jax.random.split(jax.random.PRNGKey(0), n)
+        masks = jax.vmap(lambda k: sample_participation(w, k, frac))(keys)
+        counts = np.asarray(jnp.sum(masks, axis=0), dtype=float)
+        # expected per-client rate: fraction + the rescue mass
+        expected = n * (frac + (1 - frac) ** P / P)
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        assert chi2 < 26.12, \
+            f"per-client rates {counts / n} fail chi-squared ({chi2:.1f})"
+        # the old bug is a >= 6 sigma outlier on this statistic: client 0
+        # pinned at rate 1.0 must be loudly rejected, not borderline
+        assert counts.max() / n < 0.75
+
+    def test_never_empty_and_rescue_varies(self):
+        """At a tiny fraction the cohort still never comes back empty,
+        and the rescue pick is key-driven — not a fixed client."""
+        P, frac = 4, 0.01
+        w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+        keys = jax.random.split(jax.random.PRNGKey(1), 300)
+        masks = np.asarray(
+            jax.vmap(lambda k: sample_participation(w, k, frac))(keys))
+        assert masks.any(axis=1).all()
+        singletons = masks[masks.sum(axis=1) == 1]
+        assert len(np.unique(np.argmax(singletons, axis=1))) == P
+
+    def test_full_participation_keeps_everyone(self, key):
+        w = jnp.full((5,), 0.2)
+        assert bool(sample_participation(w, key, 1.0).all())
 
 
 class TestRoundLens:
