@@ -1,0 +1,192 @@
+"""The ε–utility–attack frontier: what DP buys against the recorded wire.
+
+For each data scenario (IID shards and a Dirichlet label-skew split) the
+sweep trains the SAME deliberately-overfittable federation at several DP
+noise levels — ``None`` (DP off, ε = ∞) through increasingly private
+settings — recording every run's transmitted artifacts with
+:class:`repro.privacy.RoundTrace` and then attacking the recording:
+
+  noise_mult  ->  ε (strong composition, worst-case client)
+              ->  membership AUC (loss-threshold MIA on the trace)
+              ->  utility (similarity_report of the final generator)
+
+Contracts asserted before results are emitted (the ``privacy`` CI lane
+runs a 2-point slice of exactly this):
+
+  * every DP ε is finite and positive, and STRICTLY DECREASES as
+    noise_mult rises (more noise = stronger guarantee);
+  * the attack's excess AUC ``|auc - 0.5|`` does not grow along the
+    noise axis (small slack for attack variance) and the most-private
+    point leaks no more than the non-private one;
+  * the null-calibration AUC stays near 0.5 at every point (the attack
+    statistic itself is honest);
+  * utility metrics stay finite at every point (DP degrades quality,
+    it must not destroy the run);
+  * the DP'd one-program round issues EXACTLY as many fused
+    ``weighted_agg`` merge dispatches as the non-DP round (privacy does
+    not break the one-program shape).
+
+Wired into ``run.py --only privacy``; CLI for the CI lane::
+
+    PYTHONPATH=src python -m benchmarks.privacy_bench --points 2 \
+        --scenarios iid
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.architectures import run_federated  # noqa: E402
+from repro.fed import FederatedProgram, setup_federation  # noqa: E402
+from repro.gan.ctgan import CTGANConfig  # noqa: E402
+from repro.gan.dp import DPConfig  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+from repro.privacy import (RoundTrace, loss_threshold_mia,  # noqa: E402
+                           null_auc)
+from repro.tabular import (make_dataset, partition_iid,  # noqa: E402
+                           partition_label_skew)
+
+from .common import emit, save_json  # noqa: E402
+
+# The overfit victim: tiny shards, many local steps — the regime where a
+# non-private federation demonstrably leaks membership, so the frontier
+# has signal to trade away.
+CFG = CTGANConfig(batch_size=8, gen_hidden=(32,), disc_hidden=(32,),
+                  pac=4, z_dim=8)
+ROUNDS, LOCAL_STEPS, CLIENTS, TRAIN_ROWS, HOLD_ROWS = 6, 5, 2, 40, 200
+
+# Noise grid, weakest defense first; None = DP off (ε = ∞ baseline).
+# Adam is gradient-scale-invariant, so once the Gaussian term dominates
+# the summed clipped gradient the trained model stops changing with σ —
+# the informative part of the axis is noise comparable to the per-step
+# signal (~n_packs / sqrt(param_dim)), hence the sub-1 multipliers.
+NOISE_GRID = (None, 0.05, 0.3, 2.0)
+AUC_SLACK = 0.10          # adjacent-point attack variance allowance
+NULL_BAND = (0.35, 0.65)  # the honest-statistic calibration band
+
+SCENARIOS = {
+    "iid": lambda ds, seed: partition_iid(ds, CLIENTS, seed=seed),
+    "dirichlet": lambda ds, seed: partition_label_skew(
+        ds, CLIENTS, alpha=0.3, seed=seed),
+}
+
+
+def _frontier_point(parts, schema, holdout, noise_mult, seed, eval_real):
+    tr = RoundTrace()
+    dp = None if noise_mult is None else DPConfig(noise_mult=noise_mult)
+    res = run_federated(parts, schema, cfg=CFG, rounds=ROUNDS,
+                        local_steps=LOCAL_STEPS, seed=seed,
+                        weighting="uniform", trace=tr, dp=dp,
+                        eval_real=eval_real, eval_every=ROUNDS,
+                        eval_samples=512)
+    enc = res.encoders
+    mia = loss_threshold_mia(tr, cfg=CFG, enc=enc, member_rows=parts[0],
+                             holdout_rows=holdout)
+    point = {
+        "noise_mult": noise_mult,
+        "epsilon": float("inf") if res.epsilon is None else res.epsilon,
+        "attack_auc": mia["auc"],
+        "null_auc": null_auc(tr, CFG, enc, holdout),
+        "avg_jsd": res.history[-1]["avg_jsd"],
+        "avg_wd": res.history[-1]["avg_wd"],
+        "seconds": res.seconds,
+    }
+    return point
+
+
+def _check_dispatch_parity(parts, schema, seed):
+    """The DP'd round must cost exactly the same number of fused merge
+    dispatches as the non-DP round — DP changes the local step body, not
+    the one-program shape."""
+    fe = setup_federation(parts, schema, CFG, seed, "uniform")
+    counts = {}
+    for label, dp in (("off", None), ("on", DPConfig(noise_mult=2.0))):
+        prog = FederatedProgram(CFG, fe.spans, fe.cond_spans,
+                                batch=CFG.batch_size, local_steps=2,
+                                weighting="uniform", dp=dp)
+        with ops.dispatch_scope() as d:
+            prog.round(fe.states, fe.tables, fe.S, fe.n_rows,
+                       jax.random.PRNGKey(seed))
+        counts[label] = ops.stage_dispatches(d, "weighted_agg")
+    assert counts["on"] == counts["off"] == 1, \
+        f"DP round changed the merge dispatch count: {counts}"
+    return counts
+
+
+def frontier(*, points: int | None = None, scenarios=None,
+             seed: int = 0) -> dict:
+    """Run the sweep and enforce the frontier contract.  ``points``
+    truncates the noise grid (CI runs 2: the DP-off baseline + one
+    private point); ``scenarios`` selects from ``SCENARIOS``."""
+    grid = NOISE_GRID[:points] if points else NOISE_GRID
+    names = list(scenarios or SCENARIOS)
+    ds = make_dataset("adult", n_rows=TRAIN_ROWS, seed=seed)
+    holdout = make_dataset("adult", n_rows=HOLD_ROWS, seed=seed + 100).data
+    results = {}
+    for scen in names:
+        parts = SCENARIOS[scen](ds, seed)
+        pts = [_frontier_point(parts, ds.schema, holdout, nm, seed, ds.data)
+               for nm in grid]
+        for p in pts:
+            emit(f"privacy/{scen}/noise={p['noise_mult']}",
+                 p["seconds"] * 1e6,
+                 f"eps={p['epsilon']:.3g} auc={p['attack_auc']:.3f} "
+                 f"jsd={p['avg_jsd']:.3f}")
+        _gate(scen, pts, grid)
+        results[scen] = pts
+    results["dispatch_parity"] = _check_dispatch_parity(
+        SCENARIOS[names[0]](ds, seed), ds.schema, seed)
+    return results
+
+
+def _gate(scen: str, pts: list[dict], grid) -> None:
+    eps = [p["epsilon"] for p in pts]
+    auc = [p["attack_auc"] for p in pts]
+    excess = [abs(a - 0.5) for a in auc]
+    for p in pts:
+        assert np.isfinite(p["avg_jsd"]) and np.isfinite(p["avg_wd"]), \
+            f"{scen}: non-finite utility at noise={p['noise_mult']}"
+        assert 0.0 <= p["attack_auc"] <= 1.0
+        assert NULL_BAND[0] <= p["null_auc"] <= NULL_BAND[1], \
+            f"{scen}: null calibration broke ({p['null_auc']:.3f})"
+    dp_eps = [e for e, nm in zip(eps, grid) if nm is not None]
+    assert all(np.isfinite(e) and e > 0 for e in dp_eps), \
+        f"{scen}: non-finite/non-positive DP epsilon {dp_eps}"
+    assert all(a > b for a, b in zip(dp_eps, dp_eps[1:])), \
+        f"{scen}: epsilon must strictly decrease with noise, got {dp_eps}"
+    assert all(b <= a + AUC_SLACK for a, b in zip(excess, excess[1:])), \
+        f"{scen}: attack excess AUC grew along the noise axis: {excess}"
+    if len(pts) > 1:
+        assert excess[-1] <= excess[0] + 1e-9, \
+            (f"{scen}: most-private point leaks more than baseline "
+             f"({excess[-1]:.3f} vs {excess[0]:.3f})")
+
+
+def run_all(sc=None) -> dict:
+    """run.py entry (``--only privacy``).  ``sc`` (the BenchScale) is
+    accepted for interface parity; the frontier runs its own fixed
+    overfit regime — attack power needs overfitting, not scale."""
+    return frontier()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--points", type=int, default=None,
+                    help="truncate the noise grid to this many points "
+                         "(2 = baseline + one private point, the CI slice)")
+    ap.add_argument("--scenarios", default=None,
+                    help=f"comma list from {sorted(SCENARIOS)}")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    scen = args.scenarios.split(",") if args.scenarios else None
+    res = frontier(points=args.points, scenarios=scen, seed=args.seed)
+    save_json("results/privacy_frontier.json", res)
+
+
+if __name__ == "__main__":
+    main()

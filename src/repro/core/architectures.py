@@ -38,6 +38,7 @@ from ..fed.merge import replicate as _replicate
 from ..fed.program import FederatedProgram
 from ..fed.setup import setup_federation
 from ..gan.ctgan import CTGANConfig
+from ..gan.dp import DPConfig
 from ..gan.trainer import GANState, init_gan_state
 from ..synth import DeviceSampler, RoundEngine, draw_batch, synthesize_table
 from ..tabular.encoders import ColumnSpec, TableEncoders, fit_centralized_encoders
@@ -62,6 +63,10 @@ class FedRunResult:
     comm_bytes_per_round: float
     retries: int = 0               # poisoned eval chunks re-run from ckpt
     blocked: np.ndarray | None = None   # (P,) retry blocklist at exit
+    epsilon: float | None = None   # DP (eps, delta) spent per client over the
+                                   # run (None when dp= was off; inf when the
+                                   # batch exceeds the smallest client, where
+                                   # the subsampling estimate is undefined)
 
 
 def _states_finite(states: GANState) -> bool:
@@ -87,7 +92,9 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                   ckpt_dir: str | None = None,
                   resume: bool = False,
                   max_retries: int = 2,
-                  retry_backoff: float = 0.0) -> FedRunResult:
+                  retry_backoff: float = 0.0,
+                  dp: DPConfig | None = None,
+                  trace=None) -> FedRunResult:
     """Fed-TGAN (weighting='fedtgan'), vanilla FL ('uniform'), or the
     Fed\\SW ablation ('quantity').
 
@@ -131,6 +138,22 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
     re-runs; after ``max_retries`` poisoned chunks it raises
     :class:`~repro.fed.faults.PoisonedRunError`.  ``retry_backoff`` adds
     ``retry_backoff * attempt`` seconds of sleep before each re-run.
+
+    Privacy knobs:
+
+    ``dp`` — a :class:`~repro.gan.dp.DPConfig`; every client's local D
+    step becomes DP-SGD (per-pack clip + Gaussian noise,
+    :mod:`repro.gan.dp`) INSIDE the scanned round, so the DP'd global
+    round is still ONE fused-merge dispatch.  The result's ``epsilon``
+    reports the strong-composition estimate at the SMALLEST client (the
+    worst-cased guarantee); ``inf`` when the batch exceeds that client's
+    rows (the subsampling estimate is undefined there).
+    ``trace`` — a :class:`repro.privacy.RoundTrace` to record the run's
+    transmitted artifacts into (setup-time §4.1 stats + every round's
+    ``(P, D)`` update stack), for the attack harness.  Works under both
+    programs (bit-identical round math either way); incompatible with
+    the degraded path (faults/guard/partial participation — a masked
+    round's wire surface is not the dense stack this records).
     """
     if program not in ("fed", "host"):
         raise ValueError(f"unknown program {program!r}; options: fed, host")
@@ -143,6 +166,10 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
         guard = UpdateGuard() if faults is not None else None
     use_faulted = (faults is not None or guard is not None
                    or participation < 1.0)
+    if trace is not None and use_faulted:
+        raise ValueError("trace= records the dense transmitted stack; it "
+                         "cannot be combined with faults/guard/partial "
+                         "participation (the degraded path masks the wire)")
     if use_faulted and faults is None:
         faults = no_faults(rounds, P)
     if faults is not None:
@@ -153,11 +180,21 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
         faults.validate()
     fe = setup_federation(client_data, schema, cfg, seed, weighting)
     enc = fe.enc
+    if trace is not None:
+        trace.record_setup(fe)
+        trace.meta.setdefault("program", program)
+        trace.meta.setdefault("seed", seed)
+        trace.meta.setdefault("dp", dp is not None)
     prog = FederatedProgram(cfg, fe.spans, fe.cond_spans,
                             batch=cfg.batch_size, local_steps=local_steps,
                             weighting=weighting, participation=participation,
                             fedprox_mu=fedprox_mu, guard=guard,
-                            client_chunk=client_chunk, n_edges=edges)
+                            client_chunk=client_chunk, n_edges=edges, dp=dp)
+    n_min = int(np.min(np.asarray(fe.n_rows)))
+    epsilon = None
+    if dp is not None:
+        epsilon = (dp.epsilon(rounds * local_steps, cfg.batch_size, n_min)
+                   if cfg.batch_size <= n_min else float("inf"))
 
     model_bytes = comm_model.pytree_bytes(
         jax.tree.map(lambda x: x[0], (fe.states.g_params, fe.states.d_params)))
@@ -198,6 +235,19 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                                      d_params=_replicate(merged_d, P))
             return states, metrics
 
+        def one_round_traced(states, tables, key):
+            # the oracle's traced rendering: SAME per-leaf merge, with the
+            # transmitted (P, D) stack surfaced for the recorder — so a
+            # host-recorded trace is directly comparable to a fed one.
+            states, metrics = prog._clients(states, tables, key)
+            flat = flatten_stacked({"g": states.g_params,
+                                    "d": states.d_params})
+            merged_g = weighted_average(states.g_params, w)
+            merged_d = weighted_average(states.d_params, w)
+            states = states._replace(g_params=_replicate(merged_g, P),
+                                     d_params=_replicate(merged_d, P))
+            return states, metrics, flat
+
         def one_round_faulted(states, tables, key, fault):
             participate = fault.participate
             if participation < 1.0:
@@ -234,6 +284,7 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
             return states, metrics
 
         one_round = jax.jit(one_round)
+        one_round_traced = jax.jit(one_round_traced)
         one_round_faulted = jax.jit(one_round_faulted)
 
     def run_chunk(states, start, stop, plan_chunk):
@@ -244,7 +295,12 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
             for r in range(start, stop + 1):
                 k = jax.random.fold_in(key_round, r)
                 if plan_chunk is None:
-                    states, metrics = one_round(states, fe.tables, k)
+                    if trace is not None:
+                        states, metrics, flat = one_round_traced(
+                            states, fe.tables, k)
+                        trace.record_round(r, np.asarray(flat))
+                    else:
+                        states, metrics = one_round(states, fe.tables, k)
                 else:
                     fault = jax.tree.map(lambda a: a[r - start], plan_chunk)
                     states, metrics = one_round_faulted(states, fe.tables,
@@ -256,8 +312,15 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
         else:
             keys = prog.fold_round_keys(key_round, start, stop + 1)
             if plan_chunk is None:
-                states, metrics = prog.run(states, fe.tables, fe.S,
-                                           fe.n_rows, keys)
+                if trace is not None:
+                    states, metrics, arts = prog.run_traced(
+                        states, fe.tables, fe.S, fe.n_rows, keys)
+                    stacks = np.asarray(arts["updates"])
+                    for i, r in enumerate(range(start, stop + 1)):
+                        trace.record_round(r, stacks[i])
+                else:
+                    states, metrics = prog.run(states, fe.tables, fe.S,
+                                               fe.n_rows, keys)
             else:
                 states, metrics = prog.run_faulted(states, fe.tables, fe.S,
                                                    fe.n_rows, keys,
@@ -323,7 +386,8 @@ def run_federated(client_data: list[np.ndarray], schema: list[ColumnSpec],
                         history, enc,
                         jax.tree.map(lambda x: x[0], states.g_params),
                         dt, bytes_round, retries=retries,
-                        blocked=blocked if use_faulted else None)
+                        blocked=blocked if use_faulted else None,
+                        epsilon=epsilon)
 
 
 def run_centralized(data: np.ndarray, schema: list[ColumnSpec], *,

@@ -62,6 +62,7 @@ from ..core.fedavg import fedprox_wrap, sample_participation
 from ..core.weighting import (quantity_only_weights, uniform_weights,
                               weights_from_divergence)
 from ..gan.ctgan import CTGANConfig
+from ..gan.dp import DPConfig, make_dp_train_steps
 from ..gan.trainer import GANState, make_train_steps
 from ..kernels import ops
 from ..synth import RoundEngine, SamplerTables
@@ -122,7 +123,8 @@ class FederatedProgram:
                  fedprox_mu: float = 0.0,
                  guard: UpdateGuard | None = None,
                  client_chunk: int | None = None,
-                 n_edges: int | None = None):
+                 n_edges: int | None = None,
+                 dp: DPConfig | None = None):
         if weighting not in WEIGHTINGS:
             raise ValueError(f"unknown weighting {weighting!r}; "
                              f"options: {WEIGHTINGS}")
@@ -147,24 +149,37 @@ class FederatedProgram:
         # weighted_agg per tier).
         self.client_chunk = client_chunk
         self.n_edges = n_edges
+        # dp swaps every client's scanned D/G step for the DP-SGD variant
+        # (per-pack clip + Gaussian noise, repro.gan.dp) — the round keeps
+        # its one-program shape; only the local step body changes.
+        self.dp = dp
         if engine is None:
             step_fn = None
+            if dp is not None:
+                step_fn = make_dp_train_steps(cfg, tuple(spans),
+                                              tuple(cond_spans),
+                                              l2_clip=dp.l2_clip,
+                                              noise_mult=dp.noise_mult)
             if self.fedprox_mu > 0:
                 step_fn = fedprox_wrap(
-                    make_train_steps(cfg, tuple(spans), tuple(cond_spans)),
+                    step_fn or make_train_steps(cfg, tuple(spans),
+                                                tuple(cond_spans)),
                     self.fedprox_mu, lens=_gan_lens, merge=_gan_merge)
             engine = RoundEngine(cfg, tuple(spans), tuple(cond_spans),
                                  batch=batch, local_steps=local_steps,
                                  step_fn=step_fn)
-        elif self.fedprox_mu > 0:
-            raise ValueError("pass either a prebuilt engine or fedprox_mu, "
-                             "not both (the prox step wraps the step_fn)")
+        elif self.fedprox_mu > 0 or dp is not None:
+            raise ValueError("pass either a prebuilt engine or "
+                             "fedprox_mu/dp, not both (the prox/DP step "
+                             "wraps or replaces the step_fn)")
         self.engine = engine
         self._merge_kw = dict(use_pallas=use_pallas, interpret=interpret)
         self.round = jax.jit(self.global_round)
         self.run = jax.jit(self._run_impl)
         self.round_faulted = jax.jit(self.faulted_global_round)
         self.run_faulted = jax.jit(self._run_faulted_impl)
+        self.round_traced = jax.jit(self.traced_global_round)
+        self.run_traced = jax.jit(self._run_traced_impl)
 
     # -- the one-program round -------------------------------------------
 
@@ -225,6 +240,62 @@ class FederatedProgram:
             return self.weighted_round(st, tables, w, k)
 
         return jax.lax.scan(body, states, round_keys)
+
+    # -- the traced round (transmitted artifacts surfaced as outputs) ----
+
+    def traced_round(self, states: GANState, tables: SamplerTables,
+                     w: jnp.ndarray, key: jax.Array):
+        """:meth:`weighted_round` that ALSO returns the round's
+        transmitted artifacts — the flat ``(P, D)`` post-local-training
+        update stack that feeds the fused merge.  This is exactly the
+        per-round privacy surface an honest-but-curious federator (or a
+        wire eavesdropper) observes, recorded for the attack harness
+        (:mod:`repro.privacy`).
+
+        The merge math is the SAME flatten → ``weighted_average_flat`` →
+        unflatten pass :meth:`merge_states` performs, just with the flat
+        stack kept as an output, so the traced round is bit-identical to
+        the untraced one (``tests/test_privacy.py``).  Returns
+        ``(states, metrics, flat_updates)``."""
+        P = w.shape[0]
+        states, metrics = self._clients(states, tables, key)
+        tree = {"g": states.g_params, "d": states.d_params}
+        flat = flatten_stacked(tree)
+        if self.n_edges is None:
+            merged = ops.weighted_average_flat(flat, w, **self._merge_kw)
+        else:
+            merged = tiered_weighted_merge_flat(flat, w, self.n_edges,
+                                                **self._merge_kw)
+        out = unflatten_merged(merged, tree)
+        states = states._replace(g_params=replicate(out["g"], P),
+                                 d_params=replicate(out["d"], P))
+        return states, metrics, flat
+
+    def traced_global_round(self, states: GANState, tables: SamplerTables,
+                            S: jnp.ndarray, n_rows: jnp.ndarray,
+                            key: jax.Array):
+        """:meth:`global_round` through the traced path: returns
+        ``(states, metrics, artifacts)`` where ``artifacts`` carries the
+        ``(P, D)`` update stack and the resolved §4.2 weights."""
+        w = resolve_weights(self.weighting, S, n_rows)
+        states, metrics, flat = self.traced_round(states, tables, w, key)
+        return states, metrics, {"updates": flat, "weights": w}
+
+    def _run_traced_impl(self, states: GANState, tables: SamplerTables,
+                         S: jnp.ndarray, n_rows: jnp.ndarray,
+                         round_keys: jax.Array):
+        """Scan :meth:`traced_round` over round keys: R rounds in ONE
+        dispatch, with the per-round transmitted stacks coming back
+        stacked ``(R, P, D)`` in the artifacts dict — the replayable
+        record the trace recorder persists."""
+        w = resolve_weights(self.weighting, S, n_rows)
+
+        def body(st, k):
+            st, m, flat = self.traced_round(st, tables, w, k)
+            return st, (m, flat)
+
+        states, (metrics, flats) = jax.lax.scan(body, states, round_keys)
+        return states, metrics, {"updates": flats, "weights": w}
 
     # -- the degraded round (fault masks + guard + masked merge) ---------
 

@@ -127,21 +127,27 @@ def build_fault_plan(name: str, rounds: int, n_clients: int, *,
 
 
 def run_matrix(datasets=("adult",), scenarios=("iid", "dirichlet", "quantity"),
-               weightings=("fedtgan", "uniform"), faults=("none",), *,
+               weightings=("fedtgan", "uniform"), faults=("none",),
+               dp=(None,), *,
                n_clients: int = 3, rows: int = 600, rounds: int = 2,
                local_steps: int = 1, cfg: CTGANConfig | None = None,
                seed: int = 0, eval_samples: int = 512,
                client_chunk: int | None = None,
                edges: int | None = None) -> list[dict]:
-    """Cross datasets x scenarios x weighting modes x fault regimes
-    through the one-program engine; returns one record per cell (final
-    similarity metrics, resolved client weights, and — for faulted cells
-    — the fault summary, retry count, and a host-side finiteness flag).
+    """Cross datasets x scenarios x weighting modes x fault regimes x DP
+    noise levels through the one-program engine; returns one record per
+    cell (final similarity metrics, resolved client weights, spent ε for
+    DP cells, and — for faulted cells — the fault summary, retry count,
+    and a host-side finiteness flag).
 
     ``client_chunk`` / ``edges`` select the scale renderings (chunked
     client axis, hierarchical two-tier merge) for every cell — the CI
-    chaos lane uses them to smoke the large-P paths at small P."""
+    chaos lane uses them to smoke the large-P paths at small P.  ``dp``
+    is a tuple of noise multipliers (``None`` = DP off); each non-None
+    entry runs the cell with :class:`repro.gan.dp.DPConfig` threaded
+    into the engine's local step."""
     from ..core.architectures import run_federated   # lazy: avoids cycle
+    from ..gan.dp import DPConfig
     from ..tabular import make_dataset
     cfg = cfg or CTGANConfig(batch_size=60, gen_hidden=(32, 32),
                              disc_hidden=(32, 32), pac=6, z_dim=32)
@@ -156,32 +162,36 @@ def run_matrix(datasets=("adult",), scenarios=("iid", "dirichlet", "quantity"),
                 for fname in faults:
                     plan = build_fault_plan(fname, rounds, n_clients,
                                             seed=seed)
-                    res = run_federated(parts, ds.schema, cfg=cfg,
-                                        rounds=rounds,
-                                        local_steps=local_steps, seed=seed,
-                                        weighting=wmode, eval_real=ds.data,
-                                        eval_every=rounds,
-                                        eval_samples=eval_samples,
-                                        faults=plan,
-                                        client_chunk=client_chunk,
-                                        edges=edges,
-                                        name=f"{d}/{sc}/{wmode}/{fname}")
-                    final = res.history[-1]
-                    finite = all(
-                        bool(np.isfinite(np.asarray(l)).all())
-                        for l in jax.tree.leaves(res.final_g_params))
-                    records.append({
-                        "dataset": d, "scenario": sc, "weighting": wmode,
-                        "faults": fname, "clients": n_clients,
-                        "client_rows": [int(p.shape[0]) for p in parts],
-                        "weights": np.asarray(res.weights).round(4).tolist(),
-                        "avg_jsd": final["avg_jsd"],
-                        "avg_wd": final["avg_wd"],
-                        "seconds": res.seconds, "finite": finite,
-                        "retries": res.retries,
-                        "fault_summary": (plan.summary()
-                                          if plan is not None else None),
-                    })
+                    for dpv in dp:
+                        dpcfg = (None if dpv is None
+                                 else DPConfig(noise_mult=float(dpv)))
+                        res = run_federated(
+                            parts, ds.schema, cfg=cfg, rounds=rounds,
+                            local_steps=local_steps, seed=seed,
+                            weighting=wmode, eval_real=ds.data,
+                            eval_every=rounds, eval_samples=eval_samples,
+                            faults=plan, client_chunk=client_chunk,
+                            edges=edges, dp=dpcfg,
+                            name=f"{d}/{sc}/{wmode}/{fname}/dp={dpv}")
+                        final = res.history[-1]
+                        finite = all(
+                            bool(np.isfinite(np.asarray(l)).all())
+                            for l in jax.tree.leaves(res.final_g_params))
+                        records.append({
+                            "dataset": d, "scenario": sc,
+                            "weighting": wmode,
+                            "faults": fname, "clients": n_clients,
+                            "dp_noise": dpv, "epsilon": res.epsilon,
+                            "client_rows": [int(p.shape[0]) for p in parts],
+                            "weights":
+                                np.asarray(res.weights).round(4).tolist(),
+                            "avg_jsd": final["avg_jsd"],
+                            "avg_wd": final["avg_wd"],
+                            "seconds": res.seconds, "finite": finite,
+                            "retries": res.retries,
+                            "fault_summary": (plan.summary()
+                                              if plan is not None else None),
+                        })
     return records
 
 
@@ -197,6 +207,10 @@ def main():
     ap.add_argument("--faults", default="none",
                     help=f"comma list of fault regimes "
                          f"({','.join(sorted(FAULTS))})")
+    ap.add_argument("--dp", default="none",
+                    help="comma list of DP noise multipliers for the "
+                         "matrix's privacy axis ('none' = DP off, e.g. "
+                         "'none,1.0,4.0')")
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--rows", type=int, default=600)
     ap.add_argument("--rounds", type=int, default=2)
@@ -211,20 +225,27 @@ def main():
     ap.add_argument("--out", default=None, help="optional JSON output path")
     args = ap.parse_args()
 
+    dp_axis = tuple(None if tok in ("none", "") else float(tok)
+                    for tok in args.dp.split(","))
     recs = run_matrix(datasets=args.datasets.split(","),
                       scenarios=args.scenarios.split(","),
                       weightings=args.weightings.split(","),
                       faults=args.faults.split(","),
+                      dp=dp_axis,
                       n_clients=args.clients, rows=args.rows,
                       rounds=args.rounds, local_steps=args.local_steps,
                       client_chunk=args.client_chunk, edges=args.edges,
                       seed=args.seed)
     print(f"{'dataset':10s} {'scenario':10s} {'weighting':9s} "
-          f"{'faults':9s} {'avg_jsd':>8s} {'avg_wd':>8s} "
+          f"{'faults':9s} {'dp':>5s} {'eps':>7s} "
+          f"{'avg_jsd':>8s} {'avg_wd':>8s} "
           f"{'fin':>3s} {'try':>3s}  weights")
     for r in recs:
+        eps = "inf" if r["epsilon"] is None else f"{r['epsilon']:7.2f}"
+        dpcol = "off" if r["dp_noise"] is None else f"{r['dp_noise']:.2g}"
         print(f"{r['dataset']:10s} {r['scenario']:10s} {r['weighting']:9s} "
-              f"{r['faults']:9s} {r['avg_jsd']:8.3f} {r['avg_wd']:8.3f} "
+              f"{r['faults']:9s} {dpcol:>5s} {eps:>7s} "
+              f"{r['avg_jsd']:8.3f} {r['avg_wd']:8.3f} "
               f"{'y' if r['finite'] else 'N':>3s} {r['retries']:3d}  "
               f"{r['weights']}")
     if args.out:

@@ -51,6 +51,11 @@ class Federation:
     weights: jnp.ndarray           # (P,) resolved §4.2 weights (host copy,
                                    # for reporting; the program recomputes)
     weighting: str
+    client_stats: list | None = None   # per-client §4.1 payloads (ClientStats:
+                                       # raw cat-frequency tables + local VGM
+                                       # fits) — the literal setup-time privacy
+                                       # surface, kept for the attack harness's
+                                       # trace recorder (repro.privacy)
 
     @property
     def n_clients(self) -> int:
@@ -96,7 +101,9 @@ def tile_federation(fe: Federation, P: int) -> Federation:
     S = jnp.tile(fe.S, (reps, 1))
     w = jax.jit(resolve_weights, static_argnums=0)(fe.weighting, S, n_rows)
     return dataclasses.replace(fe, tables=tile(fe.tables), states=states,
-                               S=S, n_rows=n_rows, weights=w)
+                               S=S, n_rows=n_rows, weights=w,
+                               client_stats=(fe.client_stats * reps
+                                             if fe.client_stats else None))
 
 
 def setup_federation(client_data: list[np.ndarray], schema: list[ColumnSpec],
@@ -145,4 +152,4 @@ def setup_federation(client_data: list[np.ndarray], schema: list[ColumnSpec],
     states = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
     return Federation(init, enc, tuple(enc.spans()),
                       tuple(enc.condition_spans()), tables, states,
-                      S, n_rows, w, weighting)
+                      S, n_rows, w, weighting, client_stats=stats)

@@ -13,9 +13,16 @@ and Gaussian noise N(0, (noise_mult * l2_clip)^2) is added.
 ``dp_epsilon`` gives the standard strong-composition estimate
 eps ~= q * sqrt(2 T ln(1/delta)) / sigma (a rough upper bound; a full RDP
 accountant is drop-in replaceable).
+
+The DP step is a drop-in for :func:`repro.gan.trainer.make_train_steps`
+(same ``step(state, batch) -> (state, metrics)`` signature, same metric
+keys), so it slots straight into ``RoundEngine(dp=...)`` /
+``FederatedProgram(dp=...)`` and the whole federated round — E DP'd local
+steps per client, weighting, fused merge — stays ONE jitted program.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Sequence
 
@@ -30,25 +37,108 @@ from .ctgan import (CTGANConfig, apply_activations_fused, conditional_loss,
 from .trainer import GANState
 
 
+class DPError(ValueError):
+    """A DP hyperparameter that would silently void the guarantee
+    (non-positive noise, empty step count, sampling rate q > 1, ...).
+    Raised instead of returning garbage epsilon / un-noised updates."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Per-pack clip + Gaussian-noise settings for the DP'd round.
+
+    ``l2_clip`` bounds each pack's gradient L2 norm; ``noise_mult`` is the
+    DP-SGD sigma/clip ratio; ``delta`` the target failure probability of
+    the (eps, delta) guarantee.  Validated at construction — the fed layer
+    threads the instance, never loose floats."""
+    l2_clip: float = 1.0
+    noise_mult: float = 1.0
+    delta: float = 1e-5
+
+    def __post_init__(self):
+        if not (self.l2_clip > 0 and math.isfinite(self.l2_clip)):
+            raise DPError(f"l2_clip must be finite and > 0, "
+                          f"got {self.l2_clip}")
+        if not (self.noise_mult > 0 and math.isfinite(self.noise_mult)):
+            raise DPError(f"noise_mult must be finite and > 0, "
+                          f"got {self.noise_mult} (use dp=None for the "
+                          f"non-private path; noise 0 is not DP)")
+        if not 0.0 < self.delta < 1.0:
+            raise DPError(f"delta must be in (0, 1), got {self.delta}")
+
+    def epsilon(self, steps: int, batch: int, n_rows: int) -> float:
+        """(eps, self.delta) spent after ``steps`` updates at this batch
+        size over ``n_rows`` local rows."""
+        return dp_epsilon(steps, batch, n_rows, self.noise_mult,
+                          delta=self.delta)
+
+
 def dp_epsilon(steps: int, batch: int, n_rows: int, noise_mult: float,
                delta: float = 1e-5) -> float:
-    """Approximate (eps, delta) after ``steps`` DP updates."""
-    q = min(batch / max(n_rows, 1), 1.0)
+    """Approximate (eps, delta) after ``steps`` DP updates.
+
+    Raises :class:`DPError` on inputs that would make the estimate
+    meaningless: non-positive steps/batch/rows/noise, a subsampling rate
+    over 1 (``batch > n_rows``), or delta outside (0, 1)."""
+    if not (isinstance(steps, (int,)) or float(steps).is_integer()) \
+            or steps <= 0:
+        raise DPError(f"steps must be a positive integer, got {steps}")
+    if batch <= 0:
+        raise DPError(f"batch must be > 0, got {batch}")
+    if n_rows <= 0:
+        raise DPError(f"n_rows must be > 0, got {n_rows}")
+    if batch > n_rows:
+        raise DPError(f"batch ({batch}) > n_rows ({n_rows}): the Poisson "
+                      f"subsampling rate q would exceed 1 — the epsilon "
+                      f"estimate is undefined, not just loose")
+    if not (noise_mult > 0 and math.isfinite(noise_mult)):
+        raise DPError(f"noise_mult must be finite and > 0, got {noise_mult}")
+    if not 0.0 < delta < 1.0:
+        raise DPError(f"delta must be in (0, 1), got {delta}")
+    q = batch / n_rows
     return q * math.sqrt(2.0 * steps * math.log(1.0 / delta)) / noise_mult
 
 
 def _clip_tree(tree, max_norm):
+    """Scale ``tree`` so its GLOBAL (all-leaf) L2 norm is <= ``max_norm``;
+    identity (up to the 1e-12 norm regulariser) when already below."""
     leaves = jax.tree.leaves(tree)
-    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves) + 1e-12)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves) + 1e-12)
     scale = jnp.minimum(1.0, max_norm / gn)
-    return jax.tree.map(lambda g: g * scale, tree)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree)
+
+
+def _noise_tree(tree, key: jax.Array, sigma: float):
+    """Add iid N(0, sigma^2) to every leaf (one fresh key per leaf) — the
+    Gaussian-mechanism half of the DP step, split out so its distribution
+    is testable in isolation (chi-squared in ``tests/test_dp.py``)."""
+    flat, tdef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(flat))
+    noisy = [g + sigma * jax.random.normal(k, g.shape, g.dtype)
+             for g, k in zip(flat, keys)]
+    return tdef.unflatten(noisy)
 
 
 def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
                         cond_spans: Sequence[SpanInfo], *,
                         l2_clip: float = 1.0, noise_mult: float = 1.0):
     """Like trainer.make_train_steps but with a DP discriminator update.
-    Returns ``step(state, batch) -> (state, metrics)``."""
+
+    Returns ``step(state, batch) -> (state, metrics)`` with the SAME
+    metric keys as the non-private step (d_loss/g_loss/wgan/gp/ce), so
+    every driver that scans the engine's metrics works unchanged.
+    Raises :class:`DPError` on non-positive clip/noise and on a batch
+    size the pac grouping cannot divide."""
+    if not (l2_clip > 0 and math.isfinite(l2_clip)):
+        raise DPError(f"l2_clip must be finite and > 0, got {l2_clip}")
+    if not (noise_mult > 0 and math.isfinite(noise_mult)):
+        raise DPError(f"noise_mult must be finite and > 0, got {noise_mult} "
+                      f"(noise 0 is clipping, not DP — use the non-private "
+                      f"step for that)")
+    if cfg.batch_size % cfg.pac:
+        raise DPError(f"batch_size ({cfg.batch_size}) must be a multiple of "
+                      f"pac ({cfg.pac}): the privacy unit is one pack")
     n_hidden = len(cfg.gen_hidden)
     opt = adam(cfg.lr, cfg.b1, cfg.b2)
     spans = tuple(spans)
@@ -63,7 +153,8 @@ def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         y_fake = discriminator_forward(d_params, fake_in, k1, cfg)
         y_real = discriminator_forward(d_params, real_in, k2, cfg)
         gp = gradient_penalty(d_params, real_in, fake_in, kgp, cfg)
-        return jnp.mean(y_fake) - jnp.mean(y_real) + cfg.gp_lambda * gp
+        wgan = jnp.mean(y_fake) - jnp.mean(y_real)
+        return wgan + cfg.gp_lambda * gp, (wgan, gp)
 
     def g_loss_fn(g_params, d_params, cond, mask, key):
         kz, ka, kd = jax.random.split(key, 3)
@@ -72,8 +163,8 @@ def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         fake = apply_activations_fused(logits, spans, ka, cfg.tau)
         fake_in = jnp.concatenate([fake, cond], axis=1)
         y_fake = discriminator_forward(d_params, fake_in, kd, cfg)
-        return -jnp.mean(y_fake) + conditional_loss(logits, cond, mask,
-                                                    cond_spans)
+        ce = conditional_loss(logits, cond, mask, cond_spans)
+        return -jnp.mean(y_fake) + ce, ce
 
     def step(state: GANState, batch):
         cond, mask, real = batch
@@ -92,23 +183,21 @@ def make_dp_train_steps(cfg: CTGANConfig, spans: Sequence[SpanInfo],
         packs_fake = fake_in.reshape(n_packs, pac, -1)
         pack_keys = jax.random.split(kd, n_packs)
 
-        per_pack = jax.vmap(jax.grad(d_loss_pack),
-                            in_axes=(None, 0, 0, 0, 0))(
+        (dl, (wgan, gp)), per_pack = jax.vmap(
+            jax.value_and_grad(d_loss_pack, has_aux=True),
+            in_axes=(None, 0, 0, 0, 0))(
             state.d_params, packs_real, packs_cond, packs_fake, pack_keys)
         clipped = jax.vmap(lambda g: _clip_tree(g, l2_clip))(per_pack)
         summed = jax.tree.map(lambda g: jnp.sum(g, axis=0), clipped)
-        noise_keys = jax.random.split(kn, len(jax.tree.leaves(summed)))
-        flat, tdef = jax.tree.flatten(summed)
-        noisy = [g + noise_mult * l2_clip *
-                 jax.random.normal(k, g.shape, g.dtype)
-                 for g, k in zip(flat, noise_keys)]
-        d_grads = jax.tree.map(lambda g: g / n_packs, tdef.unflatten(noisy))
+        noisy = _noise_tree(summed, kn, noise_mult * l2_clip)
+        d_grads = jax.tree.map(lambda g: g / n_packs, noisy)
         d_params, d_opt = opt.update(d_grads, state.d_opt, state.d_params)
 
-        gl, g_grads = jax.value_and_grad(g_loss_fn)(
+        (gl, ce), g_grads = jax.value_and_grad(g_loss_fn, has_aux=True)(
             state.g_params, d_params, cond, mask, kg)
         g_params, g_opt = opt.update(g_grads, state.g_opt, state.g_params)
         new = GANState(g_params, d_params, g_opt, d_opt, state.step + 1, key)
-        return new, {"g_loss": gl}
+        return new, {"d_loss": jnp.mean(dl), "g_loss": gl,
+                     "wgan": jnp.mean(wgan), "gp": jnp.mean(gp), "ce": ce}
 
     return step

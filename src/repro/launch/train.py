@@ -72,9 +72,15 @@ def run_centralized(cfg, *, steps, batch, seq, lr, seed=0, log_every=5):
 
 
 def run_federated(cfg, *, clients, rounds, local_steps, batch, seq, lr,
-                  iid=True, seed=0, weighting="fedtgan"):
+                  iid=True, seed=0, weighting="fedtgan", dp=None):
     """Fed-TGAN rounds on a language model: vmapped client-parallel local
-    training + similarity-weighted merge."""
+    training + similarity-weighted merge.
+
+    ``dp`` (a :class:`repro.gan.dp.DPConfig`) switches the merge to
+    DP-FedAvg: every client's transmitted delta is L2-clipped to
+    ``l2_clip`` and Gaussian noise is added to the weighted mean —
+    client-level DP on the wire, the LM counterpart of the per-pack
+    DP-SGD the tabular engine runs (see docs/PRIVACY.md)."""
     model = Transformer(cfg)
     opt = adam(lr, b1=0.9, b2=0.95, max_grad_norm=1.0)
     key = jax.random.PRNGKey(seed)
@@ -97,15 +103,28 @@ def run_federated(cfg, *, clients, rounds, local_steps, batch, seq, lr,
         lambda x: jnp.broadcast_to(x[None], (clients,) + x.shape), state0)
     step_fn = make_train_step(model, opt)
 
-    def one_round(states, tokens):
+    def one_round(states, tokens, rkey):
         """tokens: (P, E, B, S)."""
+        start = jax.tree.map(lambda x: x[0], states.params)
+
         def local(st, toks):
             def body(s, tk):
                 return step_fn(s, {"tokens": tk, "labels": tk})
             return jax.lax.scan(body, st, toks)
         states, metrics = jax.vmap(local)(states, tokens)
-        merged = kernel_ops.weighted_average_tree(states.params, w,
-                                                  use_pallas=False)
+        if dp is not None:
+            from ..gan.dp import _clip_tree, _noise_tree
+            deltas = jax.tree.map(lambda p, s: p - s[None], states.params,
+                                  start)
+            clipped = jax.vmap(lambda d: _clip_tree(d, dp.l2_clip))(deltas)
+            mean_d = kernel_ops.weighted_average_tree(clipped, w,
+                                                      use_pallas=False)
+            mean_d = _noise_tree(mean_d, rkey,
+                                 dp.noise_mult * dp.l2_clip / clients)
+            merged = jax.tree.map(lambda s, d: s + d, start, mean_d)
+        else:
+            merged = kernel_ops.weighted_average_tree(states.params, w,
+                                                      use_pallas=False)
         merged = jax.tree.map(
             lambda m: jnp.broadcast_to(m[None], (clients,) + m.shape), merged)
         return states._replace(params=merged), metrics
@@ -116,11 +135,16 @@ def run_federated(cfg, *, clients, rounds, local_steps, batch, seq, lr,
     for r in range(rounds):
         toks = jnp.asarray(np.stack(
             [s[r * local_steps:(r + 1) * local_steps] for s in streams]))
-        states, m = one_round(states, toks)
+        states, m = one_round(states, toks, jax.random.fold_in(key, r))
         loss = float(jnp.mean(m["loss"]))
         hist.append({"round": r + 1, "loss": loss,
                      "t": time.perf_counter() - t0})
         print(f"round {r+1:4d} mean-loss {loss:.4f}")
+    if dp is not None:
+        # every client participates every round: q = 1, one release/round
+        eps = dp.epsilon(rounds, clients, clients)
+        print(f"client-level DP: clip {dp.l2_clip} noise {dp.noise_mult} "
+              f"-> eps ~= {eps:.3g} (delta {dp.delta})")
     return states, hist, np.asarray(w)
 
 
@@ -138,14 +162,25 @@ def main():
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--uniform-weights", action="store_true")
+    ap.add_argument("--dp-noise", type=float, default=None,
+                    help="client-level DP noise multiplier for the "
+                         "federated merge (off when unset)")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="per-client update L2 clip for --dp-noise")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.dp_noise is not None:
+        from ..gan.dp import DPConfig
+        dp = DPConfig(l2_clip=args.dp_clip, noise_mult=args.dp_noise)
+    else:
+        dp = None
     if args.federated:
         run_federated(cfg, clients=args.clients, rounds=args.rounds,
                       local_steps=args.local_steps, batch=args.batch,
                       seq=args.seq, lr=args.lr, iid=not args.non_iid,
-                      weighting="uniform" if args.uniform_weights else "fedtgan")
+                      weighting="uniform" if args.uniform_weights else "fedtgan",
+                      dp=dp)
     else:
         run_centralized(cfg, steps=args.steps, batch=args.batch,
                         seq=args.seq, lr=args.lr)

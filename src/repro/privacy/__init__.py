@@ -1,0 +1,43 @@
+"""Privacy attack harness for the federated pipeline.
+
+Three layers (see ``docs/PRIVACY.md``):
+
+* :mod:`repro.privacy.trace` — :class:`RoundTrace` records exactly what
+  Fed-TGAN transmits (setup-time §4.1 statistics + every round's flat
+  ``(P, D)`` update stack and §4.2 weights) to a replayable ``.npz``,
+  via ``run_federated(trace=...)`` on both the one-program and host
+  oracle paths.
+* :mod:`repro.privacy.attacks` — membership inference (loss-threshold
+  and shadow-calibrated) and update-leakage column reconstruction, all
+  replayed from traces.
+* the in-program defense lives in :mod:`repro.gan.dp` and threads
+  through ``RoundEngine(dp=...)`` / ``FederatedProgram(dp=...)`` /
+  ``run_federated(dp=...)``; ``benchmarks/privacy_bench.py`` sweeps the
+  resulting ε–utility frontier.
+"""
+from .attacks import (AttackError, attack_auc, category_probe_scores,
+                      category_update_energy, client_params,
+                      discriminator_scores, dominant_category_hits,
+                      global_params, leakage_report, loss_threshold_mia,
+                      null_auc, setup_marginals, shadow_model_mia,
+                      vgm_client_moments)
+from .trace import RoundTrace, TraceError
+
+__all__ = [
+    "AttackError",
+    "RoundTrace",
+    "TraceError",
+    "attack_auc",
+    "category_probe_scores",
+    "category_update_energy",
+    "client_params",
+    "discriminator_scores",
+    "dominant_category_hits",
+    "global_params",
+    "leakage_report",
+    "loss_threshold_mia",
+    "null_auc",
+    "setup_marginals",
+    "shadow_model_mia",
+    "vgm_client_moments",
+]

@@ -1,0 +1,385 @@
+"""Adversarial probes against the recorded federation surface.
+
+Two attack families, both run from a :class:`repro.privacy.RoundTrace`
+(nothing here touches client data the protocol didn't transmit):
+
+**Membership inference** — the transmitted discriminator was trained to
+score the client's REAL rows above everything else, so its score on a
+candidate row is a membership signal (Shokri et al. style, in the
+loss-threshold form of Yeom et al.).  :func:`loss_threshold_mia` ranks
+member vs holdout rows by the transmitted D's score and reports the rank
+AUC; :func:`shadow_model_mia` calibrates the decision threshold on
+shadow (known non-member) data and reports the transferred-threshold
+accuracy as well.  :func:`null_auc` is the control: two disjoint
+non-member splits must score AUC ~ 0.5, which is what the test suite
+pins the attack machinery against.
+
+**Update leakage** — each round transmits every client's post-local-
+training model, and the clients all start from the SAME broadcast
+global, so the per-client differences in the transmitted stack are pure
+local-data signal.  :func:`category_probe_scores` probes each client's
+transmitted discriminator with synthetic one-row-per-category inputs;
+de-meaning the probe matrix across the client axis cancels the shared
+(global-marginal) component, and what remains tracks which categories
+OVER-index on each client — :func:`dominant_category_hits` turns that
+into a concrete reconstruction claim checked against the true client
+skews.  :func:`category_update_energy` is the naive first-layer
+gradient-energy readout kept as a documented baseline: Adam's
+per-parameter normalization flattens raw row energy, which is exactly
+why the probe attack de-means across clients instead.  The §4.1 setup
+statistics need no attack at all — :func:`setup_marginals` /
+:func:`vgm_client_moments` simply read the per-client distributions the
+protocol ships in the clear, which is the baseline any DP story for the
+wire must also cover.
+
+All scores are plain numpy on host: attacks replay recorded traces, they
+never need a device program.
+"""
+from __future__ import annotations
+
+import numpy as np
+from scipy.stats import rankdata
+
+
+class AttackError(ValueError):
+    """An attack asked for a surface the trace doesn't carry (unknown
+    column, empty score sets, no recorded rounds)."""
+
+
+# ---------------------------------------------------------------------------
+# scoring machinery
+# ---------------------------------------------------------------------------
+
+def attack_auc(member_scores, nonmember_scores) -> float:
+    """Rank AUC of the membership scores: P(member score > non-member
+    score), ties split.  0.5 = no signal, 1.0 = perfect separation —
+    the scale every gate in the harness is calibrated on."""
+    pos = np.asarray(member_scores, np.float64).ravel()
+    neg = np.asarray(nonmember_scores, np.float64).ravel()
+    if pos.size == 0 or neg.size == 0:
+        raise AttackError("attack_auc needs non-empty member AND "
+                          "non-member score sets")
+    ranks = rankdata(np.concatenate([pos, neg]))
+    return float((ranks[:pos.size].sum() - pos.size * (pos.size + 1) / 2.0)
+                 / (pos.size * neg.size))
+
+
+def client_params(trace, cfg, enc, *, client: int, index: int = -1) -> dict:
+    """Rebuild one client's transmitted ``{"g": ..., "d": ...}`` param
+    trees from the recorded flat stack — the attacker's model surgery.
+    The unflatten template comes from a fresh ``init_gan_state`` (layout
+    is architecture data, public to the federator)."""
+    import jax
+    import jax.numpy as jnp
+    from ..fed.merge import unflatten_merged
+    from ..gan.trainer import init_gan_state
+    st = init_gan_state(jax.random.PRNGKey(0), cfg, enc.cond_dim,
+                        enc.encoded_dim)
+    tmpl = jax.tree.map(lambda x: x[None],
+                        {"g": st.g_params, "d": st.d_params})
+    flat = np.asarray(trace.update_stack(index))
+    if not 0 <= client < flat.shape[0]:
+        raise AttackError(f"client {client} outside the trace's "
+                          f"{flat.shape[0]} clients")
+    return unflatten_merged(jnp.asarray(flat[client]), tmpl)
+
+
+def discriminator_scores(d_params, rows: np.ndarray, enc, cfg,
+                         key=None) -> np.ndarray:
+    """Transmitted-D membership scores for raw ``rows``: encode through
+    the victim's (public, §4.1-agreed) encoders, pair each row with ITS
+    OWN conditional vector read off the encoding, replicate ``pac``
+    times so every row forms one pack, and run the discriminator with
+    dropout off.  Higher = "more real" under WGAN = more member-like."""
+    import jax
+    import jax.numpy as jnp
+    from ..gan.ctgan import discriminator_forward
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    encoded = np.asarray(enc.encode(rows, key))
+    cond_spans = enc.condition_spans()
+    if cond_spans:
+        cond = np.concatenate(
+            [encoded[:, s.start:s.start + s.width] for s in cond_spans], 1)
+    else:
+        cond = np.zeros((encoded.shape[0], 0), encoded.dtype)
+    x = np.concatenate([encoded, cond], axis=1)
+    packed = np.repeat(x, cfg.pac, axis=0)          # each row = one pack
+    scores = discriminator_forward(d_params, jnp.asarray(packed), key, cfg,
+                                   train=False)
+    return np.asarray(scores)
+
+
+def _round_indices(trace, rounds) -> list[int]:
+    if trace.n_rounds == 0:
+        raise AttackError("trace has no recorded rounds")
+    if rounds is None:
+        return list(range(trace.n_rounds))
+    return [r % trace.n_rounds for r in rounds]
+
+
+def global_params(trace, cfg, enc, *, index: int = -1) -> dict:
+    """The broadcast global model every client STARTED the ``index``-th
+    recorded round from, as ``{"g", "d"}`` param trees.  Free knowledge
+    for an honest-but-curious federator (it computed the merge) and the
+    per-example difficulty calibrator for the membership attacks."""
+    import jax
+    import jax.numpy as jnp
+    from ..fed.merge import unflatten_merged
+    from ..gan.trainer import init_gan_state
+    st = init_gan_state(jax.random.PRNGKey(0), cfg, enc.cond_dim,
+                        enc.encoded_dim)
+    tmpl = jax.tree.map(lambda x: x[None],
+                        {"g": st.g_params, "d": st.d_params})
+    return unflatten_merged(jnp.asarray(trace.global_before(index)), tmpl)
+
+
+def _membership_scores(trace, cfg, enc, rows, *, client, idxs,
+                       calibrated):
+    """Sum of per-round membership scores for ``rows``: the client D's
+    score, minus (when ``calibrated``) the round-start broadcast global
+    D's score on the same row.  The difference isolates what THIS
+    client's local training did for the row — population-level "this row
+    looks typical" structure cancels, which is what makes the statistic
+    sharp (difficulty calibration a la Watson et al.)."""
+    out = np.zeros(len(rows))
+    for i in idxs:
+        d_c = client_params(trace, cfg, enc, client=client, index=i)["d"]
+        out += discriminator_scores(d_c, rows, enc, cfg)
+        if calibrated:
+            d_g = global_params(trace, cfg, enc, index=i)["d"]
+            out -= discriminator_scores(d_g, rows, enc, cfg)
+    return out / len(idxs)
+
+
+# ---------------------------------------------------------------------------
+# membership inference
+# ---------------------------------------------------------------------------
+
+def loss_threshold_mia(trace, cfg, enc, member_rows: np.ndarray,
+                       holdout_rows: np.ndarray, *, client: int = 0,
+                       rounds=None, calibrated: bool = True) -> dict:
+    """Loss-threshold membership inference against one client's
+    transmitted discriminators.
+
+    Scores every candidate row with the client's post-local-training D
+    from each recorded round (all rounds by default — averaging over the
+    trace is strictly more signal than any single round), by default
+    CALIBRATED against the round-start broadcast global D (the attacker
+    holds both sides of the round; the difference isolates the local
+    training's contribution per row).  Reports the member-vs-holdout
+    rank AUC: ~0.5 means the wire leaks no membership; an overfit victim
+    separates cleanly (``tests/test_privacy.py`` pins both regimes).
+    ``calibrated=False`` falls back to raw client-D scores for traces
+    recorded without setup artifacts."""
+    idxs = _round_indices(trace, rounds)
+    m = _membership_scores(trace, cfg, enc, member_rows, client=client,
+                           idxs=idxs, calibrated=calibrated)
+    h = _membership_scores(trace, cfg, enc, holdout_rows, client=client,
+                           idxs=idxs, calibrated=calibrated)
+    return {"auc": attack_auc(m, h), "member_scores": m,
+            "holdout_scores": h, "rounds_used": idxs}
+
+
+def null_auc(trace, cfg, enc, nonmember_rows: np.ndarray, *,
+             client: int = 0, rounds=None, calibrated: bool = True) -> float:
+    """Calibration control: run the SAME scoring on two disjoint halves
+    of known non-members.  Any honest attack statistic must sit near 0.5
+    here — if it doesn't, the harness (not the federation) is broken."""
+    n = len(nonmember_rows) // 2
+    if n < 2:
+        raise AttackError("null_auc needs at least 4 non-member rows")
+    res = loss_threshold_mia(trace, cfg, enc, nonmember_rows[:n],
+                             nonmember_rows[n:2 * n], client=client,
+                             rounds=rounds, calibrated=calibrated)
+    return res["auc"]
+
+
+def shadow_model_mia(trace, cfg, enc, member_rows: np.ndarray,
+                     holdout_rows: np.ndarray, shadow_rows: np.ndarray, *,
+                     client: int = 0, rounds=None,
+                     calibrated: bool = True) -> dict:
+    """Shadow-calibrated membership inference.
+
+    The attacker holds ``shadow_rows`` it KNOWS are non-members (drawn
+    from the same population), z-scores every candidate against the
+    shadow score distribution, and claims membership above z = 0.  The
+    AUC matches the loss-threshold attack (z-scoring is monotone); the
+    new quantity is ``accuracy`` — a deployable yes/no attack whose
+    threshold transferred from shadow data rather than being tuned on
+    the answers."""
+    idxs = _round_indices(trace, rounds)
+    kw = dict(client=client, idxs=idxs, calibrated=calibrated)
+    m = _membership_scores(trace, cfg, enc, member_rows, **kw)
+    h = _membership_scores(trace, cfg, enc, holdout_rows, **kw)
+    s = _membership_scores(trace, cfg, enc, shadow_rows, **kw)
+    mu, sd = float(s.mean()), float(s.std() + 1e-12)
+    zm, zh = (m - mu) / sd, (h - mu) / sd
+    acc = 0.5 * (float((zm > 0).mean()) + float((zh <= 0).mean()))
+    return {"auc": attack_auc(zm, zh), "accuracy": acc,
+            "threshold": mu, "member_z": zm, "holdout_z": zh}
+
+
+# ---------------------------------------------------------------------------
+# update leakage (gradient-energy column reconstruction)
+# ---------------------------------------------------------------------------
+
+def _categorical_span(enc, column: int):
+    """The encoded span + conditional-vector offset of a categorical
+    column (every categorical span is condition-eligible)."""
+    cond_off = 0
+    for s in enc.condition_spans():
+        if s.column == column and s.activation == "softmax":
+            return s, cond_off
+        cond_off += s.width
+    raise AttackError(f"column {column} has no categorical span")
+
+
+def category_update_energy(trace, cfg, enc, *, column: int, client: int = 0,
+                           index: int = -1) -> np.ndarray:
+    """Per-category gradient energy in one client's transmitted update.
+
+    The attacker knows the broadcast global the client started from
+    (:meth:`RoundTrace.global_before`), so the round's parameter DELTA is
+    observable.  A category's one-hot drives exactly known input rows of
+    the first layers — the ``pac`` replicated data rows and cond-copy
+    rows of ``d/fc0``, plus the cond row of ``g/res0`` — and rows for
+    categories the client never drew receive (almost) no gradient.  The
+    squared-norm of those delta rows, summed per category and normalized
+    to a distribution, is therefore a reconstruction of which categories
+    dominate the client's column."""
+    import jax
+    import jax.numpy as jnp
+    from ..fed.merge import unflatten_merged
+    from ..gan.trainer import init_gan_state
+    delta = (np.asarray(trace.update_stack(index)[client], np.float64)
+             - np.asarray(trace.global_before(index), np.float64))
+    # rebuild the delta as param trees via the same unflatten template
+    st = init_gan_state(jax.random.PRNGKey(0), cfg, enc.cond_dim,
+                        enc.encoded_dim)
+    tmpl = jax.tree.map(lambda x: x[None],
+                        {"g": st.g_params, "d": st.d_params})
+    dtree = unflatten_merged(jnp.asarray(delta, jnp.float32), tmpl)
+
+    span, cond_off = _categorical_span(enc, column)
+    feat = enc.encoded_dim + enc.cond_dim
+    d_fc0 = np.asarray(dtree["d"]["fc0"]["w"], np.float64)  # (feat*pac, h)
+    g_fc0 = np.asarray(dtree["g"]["res0"]["fc"]["w"], np.float64)
+
+    energy = np.zeros(span.width)
+    for c in range(span.width):
+        for slot in range(cfg.pac):
+            base = slot * feat
+            energy[c] += np.square(d_fc0[base + span.start + c]).sum()
+            energy[c] += np.square(
+                d_fc0[base + enc.encoded_dim + cond_off + c]).sum()
+        energy[c] += np.square(g_fc0[cfg.z_dim + cond_off + c]).sum()
+    total = energy.sum()
+    return energy / total if total > 0 else energy
+
+
+def category_probe_scores(trace, cfg, enc, *, column: int,
+                          rounds=None) -> np.ndarray:
+    """(P, C) discriminator probe matrix for one categorical column.
+
+    For every client and every category, score a synthetic probe row —
+    the category's one-hot in the data span AND its conditional-vector
+    copy, zeros elsewhere — with that client's transmitted D (dropout
+    off, averaged over the recorded rounds).  Each client's D drifted
+    from the same broadcast start toward ITS rows during local training,
+    so row ``p`` is biased toward the categories client ``p`` holds;
+    the shared component (the global marginal every D learns) cancels
+    when the caller de-means across the client axis."""
+    import jax
+    import jax.numpy as jnp
+    from ..gan.ctgan import discriminator_forward
+    span, cond_off = _categorical_span(enc, column)
+    idxs = _round_indices(trace, rounds)
+    key = jax.random.PRNGKey(0)
+    P = trace.n_clients
+    S = np.zeros((P, span.width))
+    for i in idxs:
+        for p in range(P):
+            d = client_params(trace, cfg, enc, client=p, index=i)["d"]
+            for c in range(span.width):
+                row = np.zeros(enc.encoded_dim + enc.cond_dim, np.float32)
+                row[span.start + c] = 1.0
+                row[enc.encoded_dim + cond_off + c] = 1.0
+                pack = jnp.asarray(np.tile(row, (cfg.pac, 1)))
+                S[p, c] += float(discriminator_forward(d, pack, key, cfg,
+                                                       train=False)[0])
+    return S / len(idxs)
+
+
+def dominant_category_hits(trace, cfg, enc, *, rounds=None) -> dict:
+    """End-to-end reconstruction claim: for every (client, categorical
+    column), predict which category OVER-indexes on that client — argmax
+    of the de-meaned probe matrix — and check it against the true skew
+    (argmax of the client's §4.1 marginal minus the federation mean).
+    IID clients have nothing to leak here by construction; the hit rate
+    measures exactly the non-IID signal the wire gives away, and is the
+    quantity the leakage tests and the DP frontier track."""
+    cols = sorted(trace.cat_freqs)
+    if not cols:
+        raise AttackError("trace carries no categorical setup stats")
+    hits, total, detail = 0, 0, {}
+    for j in cols:
+        S = category_probe_scores(trace, cfg, enc, column=j, rounds=rounds)
+        rel = S - S.mean(axis=0, keepdims=True)
+        freqs = np.asarray(trace.cat_freqs[j], np.float64)
+        rel_true = freqs - freqs.mean(axis=0, keepdims=True)
+        pred = np.argmax(rel, axis=1)
+        true = np.argmax(rel_true, axis=1)
+        hits += int((pred == true).sum())
+        total += pred.size
+        detail[j] = {"predicted": pred, "true": true, "rel_scores": rel}
+    return {"hit_rate": hits / total, "columns": detail}
+
+
+# ---------------------------------------------------------------------------
+# setup-statistic leakage (§4.1 — transmitted in the clear)
+# ---------------------------------------------------------------------------
+
+def setup_marginals(trace, column: int) -> np.ndarray:
+    """The per-client categorical marginal of ``column``, read STRAIGHT
+    off the setup-time transmission — reconstruction is exact because
+    the protocol ships the frequency table itself.  (P, C) rows sum
+    to 1.  This surface is untouched by update DP; it is the baseline
+    any end-to-end privacy claim has to acknowledge."""
+    if column not in trace.cat_freqs:
+        raise AttackError(f"no categorical setup stats for column {column}")
+    return np.asarray(trace.cat_freqs[column], np.float64)
+
+
+def vgm_client_moments(trace, column: int) -> dict:
+    """Each client's continuous-column mean/std, reconstructed from the
+    transmitted VGM mixture (mean = sum w_k mu_k; var via the mixture
+    second moment).  Again exact up to the VGM fit — §4.1 sends the
+    mixture parameters in the clear."""
+    if column not in trace.vgm_means:
+        raise AttackError(f"no VGM setup stats for column {column}")
+    mu = np.asarray(trace.vgm_means[column], np.float64)     # (P, K)
+    sd = np.asarray(trace.vgm_stds[column], np.float64)
+    w = np.asarray(trace.vgm_weights[column], np.float64)
+    w = w / np.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+    mean = (w * mu).sum(axis=1)
+    second = (w * (sd ** 2 + mu ** 2)).sum(axis=1)
+    var = np.maximum(second - mean ** 2, 0.0)
+    return {"mean": mean, "std": np.sqrt(var)}
+
+
+def leakage_report(trace, cfg, enc, *, client: int = 0,
+                   rounds=None) -> dict:
+    """One-call summary of everything the wire gave away about one
+    client: probe-reconstruction hit rate over all clients/columns, the
+    exact setup-time categorical marginals, and the reconstructed
+    continuous moments."""
+    rep = {"client": client,
+           "update": dominant_category_hits(trace, cfg, enc, rounds=rounds)}
+    rep["setup_marginals"] = {j: setup_marginals(trace, j)[client]
+                              for j in sorted(trace.cat_freqs)}
+    rep["setup_moments"] = {
+        j: {k: float(v[client]) for k, v in
+            vgm_client_moments(trace, j).items()}
+        for j in sorted(trace.vgm_means)}
+    return rep

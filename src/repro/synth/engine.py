@@ -67,11 +67,27 @@ class RoundEngine:
 
     def __init__(self, cfg: CTGANConfig, spans: Sequence[SpanInfo],
                  cond_spans: Sequence[SpanInfo], *, batch: int,
-                 local_steps: int, step_fn=None):
+                 local_steps: int, step_fn=None, dp=None):
+        """``dp`` (a :class:`repro.gan.dp.DPConfig`) swaps the scanned
+        D/G step for the DP-SGD variant — per-pack clipping + Gaussian
+        noising from :func:`repro.gan.dp.make_dp_train_steps` — INSIDE
+        the same ``lax.scan``, so a DP'd round is still one program.
+        Mutually exclusive with a prebuilt ``step_fn`` (the DP step IS
+        the step_fn)."""
+        if dp is not None and step_fn is not None:
+            raise ValueError("pass either a prebuilt step_fn or dp=, not "
+                             "both (the DP config builds the step)")
         self.cfg = cfg
         self.batch = int(batch)
         self.local_steps = int(local_steps)
         self.cond_dim = sum(s.width for s in cond_spans)
+        self.dp = dp
+        if dp is not None:
+            from ..gan.dp import make_dp_train_steps
+            step_fn = make_dp_train_steps(cfg, tuple(spans),
+                                          tuple(cond_spans),
+                                          l2_clip=dp.l2_clip,
+                                          noise_mult=dp.noise_mult)
         self.step_fn = step_fn or make_train_steps(cfg, tuple(spans),
                                                    tuple(cond_spans))
         self.run_round = jax.jit(self.local_round)

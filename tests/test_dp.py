@@ -5,10 +5,17 @@ import numpy as np
 import pytest
 
 from repro.gan.ctgan import CTGANConfig
-from repro.gan.dp import dp_epsilon, make_dp_train_steps, _clip_tree
+from repro.gan.dp import (DPConfig, DPError, dp_epsilon,
+                          make_dp_train_steps, _clip_tree, _noise_tree)
 from repro.gan.trainer import init_gan_state
 from repro.tabular import make_dataset, fit_centralized_encoders
 from repro.gan.sampler import ConditionalSampler
+
+try:  # optional dev dep (requirements-dev.txt); sweeps skip without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 CFG = CTGANConfig(batch_size=40, gen_hidden=(32, 32), disc_hidden=(32, 32),
                   pac=4, z_dim=16)
@@ -63,3 +70,134 @@ def test_dp_step_runs_and_is_noisy(key):
     d2 = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in zip(
         jax.tree.leaves(s1.d_params), jax.tree.leaves(s2.d_params)))
     assert d2 > 0
+
+
+# ---------------------------------------------------------------------------
+# typed input validation: bad hyperparameters raise DPError instead of
+# silently voiding the guarantee
+
+
+class TestValidation:
+    @pytest.mark.parametrize("kw", [
+        dict(steps=0), dict(steps=-3), dict(steps=1.5),
+        dict(batch=0), dict(batch=-1),
+        dict(n_rows=0),
+        dict(batch=200, n_rows=100),        # q > 1: undefined, not loose
+        dict(noise_mult=0.0), dict(noise_mult=-1.0),
+        dict(noise_mult=float("inf")), dict(noise_mult=float("nan")),
+        dict(delta=0.0), dict(delta=1.0), dict(delta=2.0),
+    ])
+    def test_dp_epsilon_rejects(self, kw):
+        base = dict(steps=100, batch=50, n_rows=10_000, noise_mult=1.0,
+                    delta=1e-5)
+        with pytest.raises(DPError):
+            dp_epsilon(**{**base, **kw})
+
+    def test_dp_epsilon_accepts_integral_float_steps(self):
+        assert dp_epsilon(steps=100.0, batch=50, n_rows=10_000,
+                          noise_mult=1.0) == dp_epsilon(
+            steps=100, batch=50, n_rows=10_000, noise_mult=1.0)
+
+    @pytest.mark.parametrize("kw", [
+        dict(l2_clip=0.0), dict(l2_clip=-1.0),
+        dict(l2_clip=float("inf")),
+        dict(noise_mult=0.0), dict(noise_mult=float("nan")),
+        dict(delta=0.0), dict(delta=1.0),
+    ])
+    def test_dpconfig_rejects(self, kw):
+        with pytest.raises(DPError):
+            DPConfig(**kw)
+
+    def test_dpconfig_epsilon_delegates(self):
+        dc = DPConfig(noise_mult=2.0, delta=1e-6)
+        assert dc.epsilon(100, 50, 10_000) == pytest.approx(
+            dp_epsilon(100, 50, 10_000, 2.0, delta=1e-6))
+
+    @pytest.mark.parametrize("kw", [
+        dict(l2_clip=0.0), dict(noise_mult=0.0),
+        dict(noise_mult=float("-inf")),
+    ])
+    def test_make_dp_train_steps_rejects(self, kw):
+        with pytest.raises(DPError):
+            make_dp_train_steps(CFG, (), (), **{**dict(l2_clip=1.0,
+                                                       noise_mult=1.0), **kw})
+
+    def test_make_dp_train_steps_rejects_ragged_pac(self):
+        bad = CTGANConfig(batch_size=10, pac=4)
+        with pytest.raises(DPError, match="pac"):
+            make_dp_train_steps(bad, (), ())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: the clip/noise primitives hold on ARBITRARY pytrees,
+# shapes, dtypes, and hyperparameters — not just the shipped GAN layout
+
+if HAVE_HYPOTHESIS:
+    _shapes = st.lists(
+        st.tuples(st.integers(1, 5), st.integers(1, 5)),
+        min_size=1, max_size=4)
+    _dtypes = st.sampled_from([np.float32, np.float16])
+
+    def _build_tree(shapes, dtype, seed, scale):
+        rng = np.random.default_rng(seed)
+        leaves = [jnp.asarray(scale * rng.standard_normal(s), dtype=dtype)
+                  for s in shapes]
+        # exercise a non-trivial structure, not just a flat list
+        tree = {"flat": leaves[0], "nest": {}}
+        for i, leaf in enumerate(leaves[1:]):
+            tree["nest"][f"l{i}"] = leaf
+        return tree
+
+    def _global_norm(tree):
+        return float(np.sqrt(sum(
+            np.sum(np.square(np.asarray(g, dtype=np.float64)))
+            for g in jax.tree.leaves(tree))))
+
+    @settings(max_examples=12, deadline=None)
+    @given(shapes=_shapes, dtype=_dtypes, seed=st.integers(0, 2**16),
+           max_norm=st.floats(0.1, 10.0),
+           scale=st.floats(0.01, 100.0))
+    def test_clip_tree_norm_bound_any_pytree(shapes, dtype, seed, max_norm,
+                                             scale):
+        tree = _build_tree(shapes, dtype, seed, scale)
+        clipped = _clip_tree(tree, max_norm)
+        assert jax.tree.structure(clipped) == jax.tree.structure(tree)
+        for a, b in zip(jax.tree.leaves(clipped), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+        # f16 rounding of the downcast scale can overshoot ~0.1%
+        tol = 1e-5 if dtype == np.float32 else 2e-2
+        assert _global_norm(clipped) <= max_norm * (1 + tol)
+
+    @settings(max_examples=12, deadline=None)
+    @given(shapes=_shapes, dtype=_dtypes, seed=st.integers(0, 2**16),
+           headroom=st.floats(1.5, 100.0))
+    def test_clip_tree_identity_below_threshold(shapes, dtype, seed,
+                                                headroom):
+        tree = _build_tree(shapes, dtype, seed, 1.0)
+        gn = _global_norm(tree)
+        clipped = _clip_tree(tree, gn * headroom)
+        for a, b in zip(jax.tree.leaves(clipped), jax.tree.leaves(tree)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), sigma=st.floats(0.05, 20.0))
+    def test_noise_tree_matches_sigma_chi_squared(seed, sigma):
+        from scipy import stats
+        tree = {"a": jnp.zeros((64, 32)), "b": {"c": jnp.zeros((2048,))}}
+        n = 64 * 32 + 2048
+        noisy = _noise_tree(tree, jax.random.PRNGKey(seed), sigma)
+        ss = sum(float(jnp.sum(jnp.square(g)))
+                 for g in jax.tree.leaves(noisy))
+        lo, hi = stats.chi2.ppf([1e-6, 1 - 1e-6], df=n)
+        assert lo <= ss / sigma**2 <= hi, (ss / sigma**2, lo, hi)
+
+    @settings(max_examples=12, deadline=None)
+    @given(steps=st.integers(1, 500), extra=st.integers(1, 500),
+           noise=st.floats(0.1, 10.0), factor=st.floats(1.1, 10.0))
+    def test_dp_epsilon_monotone_properties(steps, extra, noise, factor):
+        base = dp_epsilon(steps, 50, 10_000, noise)
+        assert base > 0
+        assert dp_epsilon(steps + extra, 50, 10_000, noise) > base
+        assert dp_epsilon(steps, 50, 10_000, noise * factor) < base
+        assert dp_epsilon(steps, 100, 10_000, noise) > base  # larger q

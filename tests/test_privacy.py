@@ -1,0 +1,307 @@
+"""Privacy attack harness: trace recording, membership inference,
+update leakage, and the in-program DP defense's effect on all of them.
+
+The victim fixtures deliberately overfit (tiny shards, many local
+steps) so the non-private federation has real signal to leak — the
+attack gates here are what the ``privacy`` CI lane and the
+``benchmarks/privacy_bench.py`` frontier are calibrated against.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.architectures import run_federated
+from repro.fed import FederatedProgram, setup_federation
+from repro.fed.faults import no_faults
+from repro.gan.ctgan import CTGANConfig
+from repro.gan.dp import DPConfig
+from repro.kernels import ops
+from repro.privacy import (RoundTrace, TraceError, attack_auc,
+                           dominant_category_hits, global_params,
+                           leakage_report, loss_threshold_mia, null_auc,
+                           setup_marginals, shadow_model_mia,
+                           vgm_client_moments)
+from repro.synth import RoundEngine
+from repro.tabular import make_dataset, partition_iid
+from repro.tabular.encoders import ColumnSpec
+
+CFG = CTGANConfig(batch_size=8, gen_hidden=(32,), disc_hidden=(32,),
+                  pac=4, z_dim=8)
+ROUNDS, STEPS = 6, 5
+
+
+def _run(parts, schema, *, dp=None, program="fed", seed=0, trace=True,
+         rounds=ROUNDS, local_steps=STEPS, cfg=CFG, **kw):
+    tr = RoundTrace() if trace else None
+    res = run_federated(parts, schema, cfg=cfg, rounds=rounds,
+                        local_steps=local_steps, seed=seed,
+                        weighting="uniform", program=program, dp=dp,
+                        trace=tr, **kw)
+    return tr, res
+
+
+@pytest.fixture(scope="module")
+def victim():
+    """The overfit federation: 2 clients x 20 rows, 30 local steps each,
+    recorded; plus disjoint same-distribution holdout/shadow pools."""
+    ds = make_dataset("adult", n_rows=40, seed=0)
+    parts = partition_iid(ds, 2, seed=0)
+    pool = make_dataset("adult", n_rows=400, seed=100).data
+    tr, res = _run(parts, ds.schema, seed=0)
+    return ds, parts, pool, tr, res
+
+
+class TestTraceRecorder:
+    def test_record_replay_bit_exact(self, victim, tmp_path):
+        ds, parts, pool, tr, res = victim
+        path = str(tmp_path / "trace.npz")
+        tr.save(path)
+        back = RoundTrace.load(path)
+        assert back.equals(tr) and tr.equals(back)
+        # and bit-exactness is not vacuous: flip one bit, equality breaks
+        back.updates[0] = back.updates[0].copy()
+        back.updates[0][0, 0] += 1e-3
+        assert not back.equals(tr)
+
+    def test_records_full_surface(self, victim):
+        ds, parts, pool, tr, res = victim
+        assert tr.n_rounds == ROUNDS and tr.rounds == list(range(ROUNDS))
+        P = len(parts)
+        assert tr.update_stack(-1).shape[0] == P == tr.n_clients
+        assert tr.weights.shape == (P,) and tr.n_rows.shape == (P,)
+        assert tr.global0.shape == (tr.update_stack(0).shape[1],)
+        cat_cols = [j for j, c in enumerate(ds.schema)
+                    if c.kind == "categorical"]
+        cont_cols = [j for j, c in enumerate(ds.schema)
+                     if c.kind == "continuous"]
+        assert sorted(tr.cat_freqs) == cat_cols
+        assert sorted(tr.vgm_means) == cont_cols
+        for j in cat_cols:
+            np.testing.assert_allclose(tr.cat_freqs[j].sum(1), 1.0,
+                                       atol=1e-6)
+
+    def test_global_before_chain(self, victim):
+        ds, parts, pool, tr, res = victim
+        np.testing.assert_array_equal(tr.global_before(0), tr.global0)
+        w = tr.weights / tr.weights.sum()
+        expect = (w[:, None].astype(np.float64)
+                  * tr.updates[0].astype(np.float64)).sum(0)
+        np.testing.assert_allclose(tr.global_before(1), expect, atol=1e-6)
+
+    def test_traced_run_matches_untraced(self, victim):
+        """Recording is observation only: the traced program's final
+        model is BIT-identical to the untraced run at the same seed."""
+        ds, parts, pool, tr, res = victim
+        _, res_plain = _run(parts, ds.schema, seed=0, trace=False)
+        for a, b in zip(jax.tree.leaves(res.final_g_params),
+                        jax.tree.leaves(res_plain.final_g_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_host_oracle_trace_parity(self, victim):
+        """The host per-round loop records the SAME transmitted stacks
+        as the one-program path — bit-exact, every round."""
+        ds, parts, pool, tr, res = victim
+        tr_host, _ = _run(parts, ds.schema, seed=0, program="host")
+        assert tr_host.rounds == tr.rounds
+        for a, b in zip(tr.updates, tr_host.updates):
+            np.testing.assert_array_equal(a, b)
+
+    def test_trace_validation(self, tmp_path):
+        tr = RoundTrace()
+        with pytest.raises(TraceError):
+            tr.update_stack()
+        with pytest.raises(TraceError):
+            tr.record_round(0, np.zeros(3))          # not (P, D)
+        tr.record_round(0, np.zeros((2, 4)))
+        with pytest.raises(TraceError):
+            tr.record_round(1, np.zeros((3, 4)))     # client axis changed
+        with pytest.raises(TraceError):
+            tr.global_before(0)                      # no recorded setup
+        with pytest.raises(TraceError):
+            tr.global_before(1)                      # no recorded weights
+        path = str(tmp_path / "t.npz")
+        np.savez(path, rogue=np.zeros(3))
+        with pytest.raises(TraceError):
+            RoundTrace.load(path)
+
+    def test_trace_rejects_degraded_run(self, victim):
+        ds, parts, pool, tr, res = victim
+        with pytest.raises(ValueError, match="faults"):
+            _run(parts, ds.schema, participation=0.5)
+
+
+class TestMembershipInference:
+    def test_null_calibration(self, victim):
+        """Two disjoint non-member splits: the statistic must be chance."""
+        ds, parts, pool, tr, res = victim
+        nl = null_auc(tr, CFG, res.encoders, pool)
+        assert 0.4 <= nl <= 0.6, nl
+
+    def test_leaky_victim_auc_above_threshold(self, victim):
+        ds, parts, pool, tr, res = victim
+        mia = loss_threshold_mia(tr, CFG, res.encoders, parts[0], pool)
+        assert mia["auc"] >= 0.58, mia["auc"]
+
+    def test_shadow_attack_agrees_and_transfers(self, victim):
+        ds, parts, pool, tr, res = victim
+        sm = shadow_model_mia(tr, CFG, res.encoders, parts[0], pool[:200],
+                              pool[200:])
+        mia = loss_threshold_mia(tr, CFG, res.encoders, parts[0],
+                                 pool[:200])
+        assert sm["auc"] == pytest.approx(mia["auc"])  # monotone transform
+        assert sm["accuracy"] >= 0.5                   # threshold transfers
+
+    def test_dp_shrinks_membership_leak(self, victim):
+        """DP-on vs DP-off ordering: the same attack on the same victim
+        under in-program DP must end closer to chance."""
+        ds, parts, pool, tr, res = victim
+        tr_dp, res_dp = _run(parts, ds.schema, seed=0,
+                             dp=DPConfig(noise_mult=2.0))
+        enc = res.encoders
+        auc_raw = loss_threshold_mia(tr, CFG, enc, parts[0], pool)["auc"]
+        auc_dp = loss_threshold_mia(tr_dp, CFG, enc, parts[0], pool)["auc"]
+        assert abs(auc_dp - 0.5) < abs(auc_raw - 0.5), (auc_raw, auc_dp)
+
+    def test_attack_auc_scale(self):
+        assert attack_auc([1, 2, 3], [-1, -2, -3]) == 1.0
+        assert attack_auc([0, 0], [0, 0]) == 0.5
+        assert attack_auc([-5], [5]) == 0.0
+
+
+class TestUpdateLeakage:
+    @pytest.fixture(scope="class")
+    def skewed(self):
+        """Two clients with OPPOSITE categorical skew — the non-IID
+        signal the probe reconstruction recovers from updates alone."""
+        rng = np.random.default_rng(3)
+        schema = [ColumnSpec("x", "continuous", max_modes=2),
+                  ColumnSpec("c", "categorical")]
+
+        def make(p):
+            return np.stack([rng.normal(size=16),
+                             rng.choice(2, 16, p=p).astype(float)], 1)
+
+        parts = [make([.9, .1]), make([.1, .9])]
+        tr, res = _run(parts, schema, seed=3, rounds=5, local_steps=30)
+        return schema, parts, tr, res
+
+    def test_probe_recovers_over_represented_category(self, skewed):
+        schema, parts, tr, res = skewed
+        rep = dominant_category_hits(tr, CFG, res.encoders)
+        assert rep["hit_rate"] == 1.0, rep
+
+    def test_setup_marginals_are_exact(self, skewed):
+        """§4.1 ships the marginal itself — reconstruction is the
+        identity, to float precision."""
+        schema, parts, tr, res = skewed
+        freqs = setup_marginals(tr, 1)
+        for p, rows in enumerate(parts):
+            true = np.bincount(rows[:, 1].astype(int), minlength=2) / 16
+            np.testing.assert_allclose(freqs[p], true, atol=1e-9)
+
+    def test_vgm_moments_track_data(self, skewed):
+        schema, parts, tr, res = skewed
+        mom = vgm_client_moments(tr, 0)
+        for p, rows in enumerate(parts):
+            assert abs(mom["mean"][p] - rows[:, 0].mean()) < 0.5
+            assert abs(mom["std"][p] - rows[:, 0].std()) < 0.6
+
+    def test_leakage_report_shape(self, skewed):
+        schema, parts, tr, res = skewed
+        rep = leakage_report(tr, CFG, res.encoders, client=1)
+        assert set(rep) == {"client", "update", "setup_marginals",
+                            "setup_moments"}
+        assert 1 in rep["setup_marginals"] and 0 in rep["setup_moments"]
+
+
+class TestDPOneProgram:
+    @pytest.fixture(scope="class")
+    def federation(self):
+        ds = make_dataset("adult", n_rows=60, seed=1)
+        parts = partition_iid(ds, 2, seed=1)
+        fe = setup_federation(parts, ds.schema, CFG, 1, "uniform")
+        return ds, parts, fe
+
+    def test_dp_round_single_merge_dispatch(self, federation):
+        """The DP'd global round keeps the one-fused-merge contract —
+        the regression the frontier's dispatch-parity gate mirrors."""
+        ds, parts, fe = federation
+        prog = FederatedProgram(CFG, fe.spans, fe.cond_spans,
+                                batch=CFG.batch_size, local_steps=1,
+                                weighting="uniform",
+                                dp=DPConfig(noise_mult=1.0))
+        with ops.dispatch_scope() as d:
+            prog.round(fe.states, fe.tables, fe.S, fe.n_rows,
+                       jax.random.PRNGKey(0))
+        assert ops.stage_dispatches(d, "weighted_agg") == 1
+
+    def test_dp_faulted_round_single_merge_dispatch(self, federation):
+        ds, parts, fe = federation
+        prog = FederatedProgram(CFG, fe.spans, fe.cond_spans,
+                                batch=CFG.batch_size, local_steps=1,
+                                weighting="uniform",
+                                dp=DPConfig(noise_mult=1.0))
+        plan = no_faults(1, fe.n_clients)
+        fault = jax.tree.map(lambda a: a[0], plan)
+        with ops.dispatch_scope() as d:
+            prog.round_faulted(fe.states, fe.tables, fe.S, fe.n_rows,
+                               jax.random.PRNGKey(0), fault)
+        assert ops.stage_dispatches(d, "weighted_agg") == 1
+
+    def test_dp_hierarchical_round_two_tier_dispatches(self, federation):
+        ds, parts, fe = federation
+        prog = FederatedProgram(CFG, fe.spans, fe.cond_spans,
+                                batch=CFG.batch_size, local_steps=1,
+                                weighting="uniform", n_edges=2,
+                                dp=DPConfig(noise_mult=1.0))
+        with ops.dispatch_scope() as d:
+            prog.round(fe.states, fe.tables, fe.S, fe.n_rows,
+                       jax.random.PRNGKey(0))
+        assert ops.stage_dispatches(d, "weighted_agg") == 2
+
+    def test_dp_host_fed_parity(self):
+        """Under shared keys the host oracle and the one-program path
+        transmit BIT-identical DP'd updates every round."""
+        ds = make_dataset("adult", n_rows=60, seed=1)
+        parts = partition_iid(ds, 2, seed=1)
+        dp = DPConfig(noise_mult=1.0)
+        tr_fed, _ = _run(parts, ds.schema, seed=1, dp=dp, rounds=3,
+                         local_steps=2)
+        tr_host, _ = _run(parts, ds.schema, seed=1, dp=dp, rounds=3,
+                          local_steps=2, program="host")
+        for a, b in zip(tr_fed.updates, tr_host.updates):
+            np.testing.assert_array_equal(a, b)
+
+    def test_engine_dp_and_step_fn_exclusive(self):
+        ds = make_dataset("adult", n_rows=60, seed=1)
+        from repro.tabular import fit_centralized_encoders
+        enc = fit_centralized_encoders(ds.data, ds.schema,
+                                       jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="step_fn or dp"):
+            RoundEngine(CFG, enc.spans(), enc.condition_spans(),
+                        batch=8, local_steps=1, step_fn=lambda s, b: (s, {}),
+                        dp=DPConfig())
+
+    def test_program_rejects_engine_plus_dp(self):
+        ds = make_dataset("adult", n_rows=60, seed=1)
+        from repro.tabular import fit_centralized_encoders
+        enc = fit_centralized_encoders(ds.data, ds.schema,
+                                       jax.random.PRNGKey(0))
+        engine = RoundEngine(CFG, enc.spans(), enc.condition_spans(),
+                             batch=8, local_steps=1)
+        with pytest.raises(ValueError, match="prebuilt engine"):
+            FederatedProgram(CFG, enc.spans(), enc.condition_spans(),
+                             batch=8, local_steps=1, engine=engine,
+                             dp=DPConfig())
+
+    def test_epsilon_reported(self):
+        ds = make_dataset("adult", n_rows=60, seed=1)
+        parts = partition_iid(ds, 2, seed=1)
+        _, res = _run(parts, ds.schema, seed=1, dp=DPConfig(noise_mult=2.0),
+                      rounds=2, local_steps=2, trace=False)
+        expect = DPConfig(noise_mult=2.0).epsilon(4, CFG.batch_size, 30)
+        assert res.epsilon == pytest.approx(expect)
+        _, res_off = _run(parts, ds.schema, seed=1, rounds=2, local_steps=2,
+                          trace=False)
+        assert res_off.epsilon is None
