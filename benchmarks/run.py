@@ -23,8 +23,8 @@ def main() -> None:
                     help="paper-scale settings (needs real hardware)")
     ap.add_argument("--only", default=None,
                     help="comma list: tab2,tab3,tab4,fig8a,fig8b,fig10a,"
-                         "fig10b,kernels,encode,synth,serve,fed,privacy,"
-                         "roofline")
+                         "fig10b,kernels,encode,synth,serve,load,fed,"
+                         "privacy,roofline")
     args = ap.parse_args()
     sc = scale(args.full)
     want = set(args.only.split(",")) if args.only else None
@@ -32,9 +32,9 @@ def main() -> None:
     def on(name):
         return want is None or name in want
 
-    from . import (encode_bench, fed_bench, kernel_bench, privacy_bench,
-                   quality, roofline_table, serve_bench, synth_bench,
-                   timing)
+    from . import (encode_bench, fed_bench, kernel_bench, load_bench,
+                   privacy_bench, quality, roofline_table, serve_bench,
+                   synth_bench, timing)
 
     print("name,us_per_call,derived")
     results = {}
@@ -60,6 +60,8 @@ def main() -> None:
         results["synth"] = synth_bench.run_all()
     if on("serve"):
         results["serve"] = serve_bench.run_all()
+    if on("load"):
+        results["load"] = load_bench.run_all()
     if on("fed"):
         results["fed"] = fed_bench.run_all()
     if on("privacy"):

@@ -28,6 +28,9 @@ Flags accepted with ``--tabular``:
   --conditional     draw each request's condition vectors from the
                     table's training-by-sampling marginals instead of
                     zeroing them (CTGAN's real sampling mode)
+  --scheduler S     fifo (default) or continuous — deficit-round-robin
+                    dispatch cycles (identical responses on this
+                    single-tenant trace; see docs/SERVING.md)
 The LLM flags (--arch/--batch/--prompt-len/--gen) are ignored in
 ``--tabular`` mode, and vice versa.
 """
@@ -59,13 +62,17 @@ def main():
     ap.add_argument("--conditional", action="store_true",
                     help="[tabular] condition vectors from the table's "
                          "sampler marginals")
+    ap.add_argument("--scheduler", choices=("fifo", "continuous"),
+                    default="fifo",
+                    help="[tabular] fifo or continuous-batching drain")
     args = ap.parse_args()
 
     if args.tabular:
         run_tabular_server(
             requests=args.requests,
             sizes=tuple(int(s) for s in args.sizes.split(",")),
-            rounds=args.rounds, conditional=args.conditional)
+            rounds=args.rounds, conditional=args.conditional,
+            scheduler=args.scheduler)
         return
 
     cfg = get_smoke_config(args.arch)

@@ -81,7 +81,8 @@ def run_tabular_server(*, requests: int = 16,
                        sizes: tuple[int, ...] = (100, 256, 777),
                        rounds: int = 4, local_steps: int = 2,
                        n_rows: int = 1500, conditional: bool = False,
-                       seed: int = 0, quiet: bool = False) -> dict:
+                       scheduler: str = "fifo", seed: int = 0,
+                       quiet: bool = False) -> dict:
     """Warm up a generator federatedly, then serve a mixed-size trace
     through the streaming subsystem (``repro.serve``).
 
@@ -89,7 +90,10 @@ def run_tabular_server(*, requests: int = 16,
     ``examples/serve_batched.py``: a short Fed-TGAN run produces
     (g_params, encoders), the table is registered with a ladder fitted to
     the expected sizes, ``warmup()`` compiles one program per bucket, and
-    the trace drains through the double-buffered pipeline.  Returns the
+    the trace drains through the double-buffered pipeline.
+    ``scheduler="continuous"`` drains by deficit-round-robin dispatch
+    cycles instead of FIFO (identical on this single-tenant trace — the
+    flag is the production switch; see docs/SERVING.md).  Returns the
     server stats dict plus throughput fields."""
     from ..core.architectures import run_federated
     from ..gan.ctgan import CTGANConfig
@@ -116,7 +120,7 @@ def run_tabular_server(*, requests: int = 16,
         ds.name, cfg, res.encoders, res.final_g_params,
         ladder=ladder_from_sizes(sizes),
         encoded=np.asarray(res.encoders.encode(ds.data, key)))
-    server = StreamingSynthesizer(registry)
+    server = StreamingSynthesizer(registry, scheduler=scheduler)
     built = server.warmup(conditional=conditional)   # only the mode served
     ladder = registry.get(ds.name).ladder.buckets
     say(f"warmup: compiled {built} programs for buckets {ladder}")
@@ -162,13 +166,19 @@ def main():
     ap.add_argument("--conditional", action="store_true",
                     help="[tabular] draw condition vectors from the "
                          "table's sampler marginals")
+    ap.add_argument("--scheduler", choices=("fifo", "continuous"),
+                    default="fifo",
+                    help="[tabular] queue drain: submission-order FIFO or "
+                         "continuous batching (per-tenant deficit round "
+                         "robin dispatch cycles)")
     args = ap.parse_args()
 
     if args.tabular:
         run_tabular_server(
             requests=args.requests,
             sizes=tuple(int(s) for s in args.sizes.split(",")),
-            rounds=args.rounds, conditional=args.conditional)
+            rounds=args.rounds, conditional=args.conditional,
+            scheduler=args.scheduler)
         return
 
     if "decode_32k" not in supported_shapes(args.arch):

@@ -12,18 +12,24 @@ streaming server —
     several tables served at once.
 ``StreamingSynthesizer``  — request queue + bucket aggregation + a
     double-buffered generate->decode pipeline with jit-cache-hit and
-    kernel-dispatch accounting built in.
+    kernel-dispatch accounting built in.  ``scheduler="continuous"``
+    replaces the FIFO drain with per-tenant deficit-round-robin
+    dispatch cycles (``ContinuousScheduler``), and ``refit_ladder``
+    adapts a tenant's bucket ladder to its live size histogram with
+    zero recompiles charged to foreground traffic.
 
 See docs/SERVING.md for the operational tour and docs/ARCHITECTURE.md
 for how this composes with the fused device pipeline underneath.
 """
-from .bucketing import (BucketLadder, RequestTooLarge, default_ladder,
-                        ladder_from_sizes)
+from .bucketing import (BucketLadder, LadderFitError, RequestTooLarge,
+                        default_ladder, ladder_from_sizes)
 from .registry import TableEntry, TableRegistry
+from .scheduling import AdmittedRequest, ContinuousScheduler, jain_index
 from .server import (ServerOverloaded, StreamingSynthesizer,
                      SynthesisRequest, SynthesisResponse)
 
-__all__ = ["BucketLadder", "RequestTooLarge", "default_ladder",
-           "ladder_from_sizes", "TableEntry", "TableRegistry",
-           "ServerOverloaded", "StreamingSynthesizer", "SynthesisRequest",
-           "SynthesisResponse"]
+__all__ = ["BucketLadder", "LadderFitError", "RequestTooLarge",
+           "default_ladder", "ladder_from_sizes", "TableEntry",
+           "TableRegistry", "AdmittedRequest", "ContinuousScheduler",
+           "jain_index", "ServerOverloaded", "StreamingSynthesizer",
+           "SynthesisRequest", "SynthesisResponse"]

@@ -30,6 +30,12 @@ class RequestTooLarge(ValueError):
     register the table with a taller ladder)."""
 
 
+class LadderFitError(ValueError):
+    """``ladder_from_sizes`` was given nothing to fit to (empty or
+    non-positive size sample) — the typed signal to keep the current
+    ladder rather than swap to a meaningless one."""
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketLadder:
     """Sorted, static set of batch sizes the server may execute."""
@@ -76,6 +82,18 @@ def ladder_from_sizes(sizes: Sequence[int], *,
                       min_bucket: int = 64) -> BucketLadder:
     """Fit a ladder to an expected trace: one power-of-two bucket per
     distinct size class actually observed (dropping rungs no size maps
-    to), so cold-start compiles only cover shapes the trace needs."""
+    to), so cold-start compiles only cover shapes the trace needs.
+
+    Degenerate histograms are fine — rungs are deduped, so all requests
+    one size (or fewer distinct sizes than power-of-two rungs) yields a
+    short, duplicate-free ladder; an EMPTY sample raises the typed
+    :class:`LadderFitError` instead of crashing in ``max()``."""
+    sizes = [int(s) for s in sizes]
+    if not sizes:
+        raise LadderFitError("ladder_from_sizes needs at least one "
+                             "observed size; got an empty sample")
+    if min(sizes) <= 0:
+        raise LadderFitError(
+            f"sizes must be positive rows, got min {min(sizes)}")
     full = default_ladder(max(sizes), min_bucket)
     return BucketLadder(tuple(sorted({full.bucket_for(s) for s in sizes})))

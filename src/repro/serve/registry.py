@@ -11,6 +11,7 @@ arguments, so each tenant owns its own cache entries.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -40,10 +41,20 @@ class TableEntry:
                                        # warm-sets never go stale
     served_rows: int = 0
     served_requests: int = 0
+    offered_rows: int = 0              # rows submitted (vs served: fairness
+                                       # is service relative to demand)
+    # live request-size histogram the adaptive ladder refits from
+    # (StreamingSynthesizer.refit_ladder); populated at submit
+    size_histogram: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
 
     @property
     def n_columns(self) -> int:
         return len(self.encoders.schema)
+
+    def observed_sizes(self) -> tuple[int, ...]:
+        """Distinct request sizes seen so far (the refit input)."""
+        return tuple(sorted(self.size_histogram))
 
 
 class TableRegistry:

@@ -1,15 +1,33 @@
 """Streaming synthesis server: queue -> buckets -> overlapped pipeline.
 
-``StreamingSynthesizer`` turns the one-shot :func:`repro.synth.synthesize_table`
-path into a serving loop:
+``StreamingSynthesizer`` turns the one-shot
+:func:`repro.synth.synthesize_table` path into a serving loop:
 
 * **Request queue + bucket aggregation.**  ``submit`` enqueues
-  ``(table, rows, key)`` requests; at serve time each is assigned the
-  smallest rung of its table's static :class:`~repro.serve.bucketing.BucketLadder`
-  that fits.  All requests in a bucket share ONE compiled synthesis
+  ``(table, rows, key)`` requests; each is assigned (at admission) the
+  smallest rung of its table's static
+  :class:`~repro.serve.bucketing.BucketLadder` that fits.  All requests in a bucket share ONE compiled synthesis
   program, so a mixed-size trace executes against a fixed, small set of
   XLA executables — zero recompiles after warmup, which the server
   *measures* (jit-cache growth per request) rather than assumes.
+
+* **Continuous batching** (``scheduler="continuous"``).  Instead of
+  draining one global FIFO line, requests land in per-tenant queues and
+  each *dispatch cycle* is assembled by deficit round robin
+  (:class:`~repro.serve.scheduling.ContinuousScheduler`): every cycle
+  credits each backlogged tenant ``quantum`` rows and admits its oldest
+  requests while the credit covers their bucket cost.  Requests
+  submitted while a cycle drains are admitted at the next assembly —
+  between dispatches — so a tenant flooding the queue cannot park the
+  others behind its burst, yet a single-tenant trace stays byte-
+  identical to the FIFO path (within-tenant order is never reordered).
+
+* **Adaptive bucket ladder.**  ``refit_ladder`` refits a tenant's
+  ladder from the live size histogram, pre-compiles the candidate
+  rungs off the request path (charged to ``warmup_compiles``, never to
+  the foreground recompile counter), then swaps atomically.  Requests
+  already admitted keep the bucket they bound at submit, so in-flight
+  traffic completes on the old ladder bit-identically.
 
   Requests are NOT merged into a single device batch: the CTGAN generator
   batch-normalizes over the batch axis, so row values depend on the batch
@@ -46,7 +64,9 @@ import numpy as np
 from ..gan.trainer import sample_synthetic
 from ..kernels import ops
 from ..synth.engine import sample_synthetic_conditional
+from .bucketing import BucketLadder, ladder_from_sizes
 from .registry import TableEntry, TableRegistry
+from .scheduling import ContinuousScheduler
 
 
 class ServerOverloaded(RuntimeError):
@@ -91,6 +111,7 @@ class _Pending:
     bucket: int
     encoded: jax.Array
     cache_before: int                  # jit cache size when generate began
+    bg_before: int                     # background builds when generate began
 
 
 class StreamingSynthesizer:
@@ -106,7 +127,11 @@ class StreamingSynthesizer:
     def __init__(self, registry: TableRegistry, *,
                  use_pallas: bool | None = None,
                  interpret: bool | None = None, pipeline: bool = True,
-                 max_queue: int | None = None, clock=time.monotonic):
+                 max_queue: int | None = None, clock=time.monotonic,
+                 scheduler: str = "fifo", quantum: int = 512):
+        if scheduler not in ("fifo", "continuous"):
+            raise ValueError(f"scheduler must be 'fifo' or 'continuous', "
+                             f"got {scheduler!r}")
         self.registry = registry
         self.use_pallas = use_pallas
         self.interpret = interpret
@@ -116,13 +141,21 @@ class StreamingSynthesizer:
         # expiry is testable without real sleeps
         self.max_queue = max_queue
         self.clock = clock
+        self.scheduler = scheduler
         self.rejected_overload = 0
-        self.expired = 0
+        # expiry is checked at admission (cycle assembly / FIFO pop) AND
+        # at dispatch assembly — a request admitted into an in-flight
+        # cycle can outlive its deadline before its turn comes
+        self.expired_admission = 0
+        self.expired_dispatch = 0
         # each queued request carries the TableEntry it was validated
         # against: registry mutations between submit and serve cannot
-        # re-route or crash an accepted request
-        self._queue: collections.deque[tuple[SynthesisRequest, TableEntry]] \
-            = collections.deque()
+        # re-route or crash an accepted request.  The bucket binds at
+        # submit too, so a ladder swap never re-routes queued requests.
+        self._queue: collections.deque[
+            tuple[SynthesisRequest, TableEntry, int]] = collections.deque()
+        self._sched = (ContinuousScheduler(quantum)
+                       if scheduler == "continuous" else None)
         # keyed by registration uid, not name: unregistering and then
         # re-registering a name (the model-update lifecycle) yields a
         # fresh uid, so the new programs re-warm
@@ -131,7 +164,16 @@ class StreamingSynthesizer:
         self.warmup_compiles = 0
         self.serving_compiles = 0
         self.cache_hits = 0
+        # executables built OFF the request path (warmup + ladder-refit
+        # precompiles): _finish subtracts this background growth so a
+        # concurrent refit is never charged as a foreground recompile
+        self._bg_built = 0
         self.decode_dispatch_counts: list[int] = []
+
+    @property
+    def expired(self) -> int:
+        """Total expired requests (admission + dispatch expiries)."""
+        return self.expired_admission + self.expired_dispatch
 
     # ---- queue -------------------------------------------------------
     def submit(self, table: str, rows: int, *, key: jax.Array | None = None,
@@ -147,13 +189,15 @@ class StreamingSynthesizer:
         server's clock) marks the request droppable: if the drain reaches
         it past its deadline it is skipped and counted expired — no
         response is produced for it."""
-        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+        if self.max_queue is not None and len(self) >= self.max_queue:
             self.rejected_overload += 1
             raise ServerOverloaded(
-                f"queue depth {len(self._queue)} >= max_queue "
+                f"queue depth {len(self)} >= max_queue "
                 f"{self.max_queue}; retry later")
         entry = self.registry.get(table)
-        entry.ladder.bucket_for(rows)              # raises RequestTooLarge
+        # the bucket BINDS here, against the ladder current at submit: a
+        # later refit_ladder swap never re-routes an accepted request
+        bucket = entry.ladder.bucket_for(rows)     # raises RequestTooLarge
         if conditional and entry.tables is None:
             raise ValueError(f"table {table!r} registered without sampler "
                              "tables: conditional serving unavailable")
@@ -164,12 +208,20 @@ class StreamingSynthesizer:
         if key is None:
             key = jax.random.PRNGKey(rid if seed is None else seed)
         deadline_at = None if deadline is None else self.clock() + deadline
-        self._queue.append((SynthesisRequest(rid, table, int(rows), key,
-                                             hard, conditional, deadline_at),
-                            entry))
+        entry.size_histogram[int(rows)] += 1       # adaptive-ladder input
+        entry.offered_rows += int(rows)
+        req = SynthesisRequest(rid, table, int(rows), key, hard,
+                               conditional, deadline_at)
+        if self._sched is not None:
+            self._sched.push(table, (req, entry), bucket,
+                             deadline_at=deadline_at)
+        else:
+            self._queue.append((req, entry, bucket))
         return rid
 
     def __len__(self) -> int:
+        if self._sched is not None:
+            return len(self._sched)
         return len(self._queue)
 
     # ---- compile accounting ------------------------------------------
@@ -179,16 +231,19 @@ class StreamingSynthesizer:
         extract.  Growth during a request == a recompile."""
         n = (sample_synthetic._cache_size()
              + sample_synthetic_conditional._cache_size())
+        seen: set[int] = set()         # tenants may share one DecodePlan
         for name in self.registry.names():
-            n += self.registry.get(name).decode_plan._extract._cache_size()
+            extract = self.registry.get(name).decode_plan._extract
+            if id(extract) not in seen:
+                seen.add(id(extract))
+                n += extract._cache_size()
         return n
 
     # ---- pipeline stages ---------------------------------------------
-    def _generate(self, req: SynthesisRequest,
-                  entry: TableEntry) -> _Pending:
+    def _generate(self, req: SynthesisRequest, entry: TableEntry,
+                  bucket: int) -> _Pending:
         """Stage 1 (device, async): generator + fused activations at
         bucket size.  Returns immediately — the arrays are futures."""
-        bucket = entry.ladder.bucket_for(req.rows)
         before = self._cache_size()
         if req.conditional:
             encoded = sample_synthetic_conditional(
@@ -200,7 +255,7 @@ class StreamingSynthesizer:
                 entry.g_params, req.key, entry.cfg, entry.spans,
                 entry.cond_dim, bucket, req.hard,
                 self.use_pallas, self.interpret)
-        return _Pending(req, entry, bucket, encoded, before)
+        return _Pending(req, entry, bucket, encoded, before, self._bg_built)
 
     def _finish(self, p: _Pending) -> SynthesisResponse:
         """Stage 2: fused decode (ONE kernel dispatch) + host slice to
@@ -215,8 +270,11 @@ class StreamingSynthesizer:
         # decode completion — decode-stage compiles count too.  With
         # pipelining the windows of in-flight requests overlap, so one
         # compile can flag both: conservative in the right direction for
-        # a zero-recompile contract.
-        cache_hit = self._cache_size() == p.cache_before
+        # a zero-recompile contract.  Background builds (warmup/refit
+        # precompiles inside this window) are subtracted: they are off
+        # the request path by construction, never foreground recompiles.
+        background = self._bg_built - p.bg_before
+        cache_hit = self._cache_size() - p.cache_before <= background
         if cache_hit:
             self.cache_hits += 1
         else:
@@ -231,23 +289,72 @@ class StreamingSynthesizer:
 
     # ---- serving ------------------------------------------------------
     def stream(self) -> Iterator[SynthesisResponse]:
-        """Drain the queue, yielding responses in submission order.
+        """Drain the queue, yielding responses as they finish.
 
-        With ``pipeline=True`` (default) request *i+1*'s generation is
-        dispatched BEFORE request *i*'s decode blocks, so device compute
-        and host-side decode/slice overlap (double buffering).  New
-        ``submit`` calls made while consuming the iterator join the same
-        drain — the streaming mode."""
+        ``scheduler="fifo"`` serves in submission order; ``"continuous"``
+        serves in dispatch-cycle order (deficit round robin across
+        tenants, FIFO within a tenant — identical order on single-tenant
+        traces).  With ``pipeline=True`` (default) request *i+1*'s
+        generation is dispatched BEFORE request *i*'s decode blocks, so
+        device compute and host-side decode/slice overlap (double
+        buffering).  New ``submit`` calls made while consuming the
+        iterator join the same drain — in continuous mode they are
+        admitted at the next cycle assembly, between dispatches."""
+        if self._sched is not None:
+            yield from self._stream_continuous()
+        else:
+            yield from self._stream_fifo()
+
+    def _stream_fifo(self) -> Iterator[SynthesisResponse]:
         pending: _Pending | None = None
         while self._queue or pending is not None:
             nxt = None
             if self._queue:
-                req, entry = self._queue.popleft()
+                req, entry, bucket = self._queue.popleft()
                 if (req.deadline_at is not None
                         and self.clock() > req.deadline_at):
-                    self.expired += 1     # dead on arrival: skip, no work
+                    self.expired_dispatch += 1   # dead: skip, no work
                     continue
-                nxt = self._generate(req, entry)
+                nxt = self._generate(req, entry, bucket)
+                if not self.pipeline:
+                    yield self._finish(nxt)
+                    continue
+            if pending is not None:
+                yield self._finish(pending)
+            pending = nxt
+
+    def _stream_continuous(self) -> Iterator[SynthesisResponse]:
+        """Continuous-batching drain: assemble a dispatch cycle by DRR,
+        dispatch it through the double-buffered pipeline, re-assemble.
+        Deadlines are checked at admission (cycle assembly — counted
+        ``expired_admission``) AND again per request at dispatch time
+        (``expired_dispatch``): a request admitted into an in-flight
+        cycle can outlive its deadline before its turn comes."""
+
+        def count_admission_expiry(_adm):
+            self.expired_admission += 1
+
+        cycle: collections.deque = collections.deque()
+        pending: _Pending | None = None
+        while True:
+            if not cycle:
+                # admit between dispatches: everything queued (including
+                # submits made while the previous cycle drained) competes
+                # for the next cycle now
+                while not cycle and len(self._sched):
+                    cycle.extend(self._sched.assemble(
+                        now=self.clock(), on_expired=count_admission_expiry))
+            if not cycle and pending is None:
+                break
+            nxt = None
+            if cycle:
+                adm = cycle.popleft()
+                req, entry = adm.item
+                if (req.deadline_at is not None
+                        and self.clock() > req.deadline_at):
+                    self.expired_dispatch += 1
+                    continue
+                nxt = self._generate(req, entry, adm.cost)
                 if not self.pipeline:
                     yield self._finish(nxt)
                     continue
@@ -279,46 +386,102 @@ class StreamingSynthesizer:
         it would silently promise nothing); ``force`` re-executes even
         warm combos."""
         before_total = self._cache_size()
-        key = jax.random.PRNGKey(0)
-        hard_modes = (False, True) if hard is None else (bool(hard),)
         for name in names if names is not None else self.registry.names():
             entry = self.registry.get(name)
-            has_cond = entry.tables is not None
-            if conditional is None:
-                modes = (False, True) if has_cond else (False,)
-            elif conditional:
-                if not has_cond:
-                    raise ValueError(
-                        f"table {name!r} registered without sampler "
-                        "tables: conditional warmup is meaningless")
-                modes = (True,)
-            else:
-                modes = (False,)
-            for bucket in entry.ladder.buckets:
-                for h in hard_modes:
-                    for cond in modes:
-                        combo = (entry.uid, bucket, h, cond)
-                        if combo in self._warmed and not force:
-                            continue
-                        req = SynthesisRequest(-1, name, bucket, key, h,
-                                               cond)
-                        p = self._generate(req, entry)
-                        p.entry.decode_plan.decode(
-                            p.encoded, use_pallas=self.use_pallas,
-                            interpret=self.interpret)
-                        self._warmed.add(combo)
+            hard_modes, cond_modes = self._resolve_modes(name, entry, hard,
+                                                         conditional)
+            self._warm_buckets(name, entry, entry.ladder.buckets,
+                               hard_modes, cond_modes, force)
         built = self._cache_size() - before_total
         self.warmup_compiles += built
+        self._bg_built += built
         return built
+
+    def _resolve_modes(self, name: str, entry: TableEntry,
+                       hard: bool | None, conditional: bool | None
+                       ) -> tuple[tuple[bool, ...], tuple[bool, ...]]:
+        hard_modes = (False, True) if hard is None else (bool(hard),)
+        has_cond = entry.tables is not None
+        if conditional is None:
+            cond_modes = (False, True) if has_cond else (False,)
+        elif conditional:
+            if not has_cond:
+                raise ValueError(
+                    f"table {name!r} registered without sampler "
+                    "tables: conditional warmup is meaningless")
+            cond_modes = (True,)
+        else:
+            cond_modes = (False,)
+        return hard_modes, cond_modes
+
+    def _warm_buckets(self, name: str, entry: TableEntry,
+                      buckets: tuple[int, ...],
+                      hard_modes: tuple[bool, ...],
+                      cond_modes: tuple[bool, ...],
+                      force: bool = False) -> None:
+        """Execute every (bucket, mode) program once — the shared compile
+        path of :meth:`warmup` and :meth:`refit_ladder`."""
+        key = jax.random.PRNGKey(0)
+        for bucket in buckets:
+            for h in hard_modes:
+                for cond in cond_modes:
+                    combo = (entry.uid, bucket, h, cond)
+                    if combo in self._warmed and not force:
+                        continue
+                    req = SynthesisRequest(-1, name, bucket, key, h, cond)
+                    p = self._generate(req, entry, bucket)
+                    p.entry.decode_plan.decode(
+                        p.encoded, use_pallas=self.use_pallas,
+                        interpret=self.interpret)
+                    self._warmed.add(combo)
+
+    def refit_ladder(self, table: str, *, sizes=None, min_bucket: int = 64,
+                     hard: bool | None = True,
+                     conditional: bool | None = None
+                     ) -> BucketLadder | None:
+        """Refit ``table``'s bucket ladder to its live size histogram and
+        swap it in with ZERO recompiles charged to foreground traffic.
+
+        The candidate ladder is ``ladder_from_sizes`` over the sizes the
+        tenant actually served (or an explicit ``sizes`` sample).  If it
+        equals the current ladder this is a no-op returning ``None`` —
+        idempotent, nothing compiles.  Otherwise the candidate's rungs
+        are pre-compiled HERE, off the request path (charged to
+        ``warmup_compiles`` / subtracted from every in-flight request's
+        recompile window), and only then is ``entry.ladder`` swapped —
+        a single reference assignment, atomic under the GIL.  Requests
+        already admitted bound their bucket at submit, so in-flight
+        traffic completes on the old ladder bit-identically; requests
+        submitted after the swap quantize onto the new rungs, every one
+        of which is already warm.  ``hard``/``conditional`` select the
+        modes to pre-compile, exactly as in :meth:`warmup`."""
+        entry = self.registry.get(table)
+        observed = tuple(sizes) if sizes is not None \
+            else entry.observed_sizes()
+        candidate = ladder_from_sizes(observed, min_bucket=min_bucket)
+        if candidate.buckets == entry.ladder.buckets:
+            return None                # idempotent: same shapes, no work
+        hard_modes, cond_modes = self._resolve_modes(table, entry, hard,
+                                                     conditional)
+        before = self._cache_size()
+        self._warm_buckets(table, entry, candidate.buckets, hard_modes,
+                           cond_modes)
+        built = self._cache_size() - before
+        self.warmup_compiles += built
+        self._bg_built += built
+        entry.ladder = candidate       # the atomic swap
+        return candidate
 
     def stats(self) -> dict:
         """Serving counters: the zero-recompile and one-dispatch-per-
         request contracts as observable numbers."""
         per_table = {
             name: {"requests": self.registry.get(name).served_requests,
-                   "rows": self.registry.get(name).served_rows}
+                   "rows": self.registry.get(name).served_rows,
+                   "offered_rows": self.registry.get(name).offered_rows}
             for name in self.registry.names()}
         return {
+            "scheduler": self.scheduler,
             "requests": len(self.decode_dispatch_counts),
             "rows": sum(t["rows"] for t in per_table.values()),
             "warmup_compiles": self.warmup_compiles,
@@ -326,6 +489,8 @@ class StreamingSynthesizer:
             "cache_hits": self.cache_hits,
             "rejected_overload": self.rejected_overload,
             "expired": self.expired,
+            "expired_admission": self.expired_admission,
+            "expired_dispatch": self.expired_dispatch,
             "decode_dispatches": dict(collections.Counter(
                 self.decode_dispatch_counts)),
             "tables": per_table,

@@ -9,9 +9,9 @@ import pytest
 from repro.gan.ctgan import CTGANConfig
 from repro.gan.trainer import init_gan_state, sample_synthetic
 from repro.kernels import ops
-from repro.serve import (BucketLadder, RequestTooLarge, ServerOverloaded,
-                         StreamingSynthesizer, TableRegistry,
-                         default_ladder, ladder_from_sizes)
+from repro.serve import (BucketLadder, LadderFitError, RequestTooLarge,
+                         ServerOverloaded, StreamingSynthesizer,
+                         TableRegistry, default_ladder, ladder_from_sizes)
 from repro.synth import synthesize_table
 from repro.tabular import (ColumnSpec, fit_centralized_encoders,
                            make_dataset)
@@ -52,6 +52,24 @@ class TestBucketLadder:
         assert lad.buckets == (64, 128, 256, 512)
         for s in [17, 100, 256, 500]:
             assert lad.bucket_for(s) in lad.buckets
+
+    def test_ladder_from_sizes_single_size(self):
+        """An all-one-size histogram yields a one-rung ladder."""
+        assert ladder_from_sizes([100] * 50).buckets == (128,)
+
+    def test_ladder_from_sizes_dedupes_colliding_rungs(self):
+        """Two sizes quantizing to the same power of two must not
+        produce duplicate rungs (BucketLadder rejects duplicates)."""
+        assert ladder_from_sizes([65, 100]).buckets == (128,)
+        assert ladder_from_sizes([65, 100, 200]).buckets == (128, 256)
+
+    def test_ladder_from_sizes_empty_raises_typed(self):
+        with pytest.raises(LadderFitError, match="empty"):
+            ladder_from_sizes([])
+
+    def test_ladder_from_sizes_nonpositive_raises_typed(self):
+        with pytest.raises(LadderFitError, match="positive"):
+            ladder_from_sizes([64, 0, 128])
 
 
 class TestDispatchScope:
@@ -391,3 +409,118 @@ class TestPreparePlans:
         dp = enc.prepare_plans(encode=True)
         assert dp is enc.decode_plan()
         assert enc.plan() is enc.plan()     # encode cache populated + stable
+
+
+@pytest.fixture()
+def adaptive(served):
+    """A fresh registry/server per test (the module-scoped ``served``
+    fixture's ladder must never be mutated by a refit) sharing the warm
+    global jit caches.  Initial ladder (64, 128, 512): fitted to small
+    traffic plus a tall top rung, the shape a refit will want to move."""
+    ds, enc, cfg, g, _, _, _ = served
+    registry = TableRegistry()
+    registry.register("adult", cfg, enc, g,
+                      ladder=BucketLadder((64, 128, 512)))
+    server = StreamingSynthesizer(registry)
+    server.warmup()
+    return enc, cfg, g, registry, server
+
+
+class TestAdaptiveLadder:
+    """``refit_ladder``: live-histogram refit, atomic swap, zero
+    foreground recompiles, old-ladder completion for in-flight work."""
+
+    def test_unshifted_histogram_is_a_noop(self, adaptive):
+        """Traffic matching the current ladder refits to the SAME rungs:
+        returns None, compiles nothing, ladder object untouched."""
+        enc, cfg, g, registry, server = adaptive
+        for s, seed in [(17, 1), (100, 2), (500, 3)]:
+            server.submit("adult", s, seed=seed)
+        server.serve()
+        before_ladder = registry.get("adult").ladder
+        before_warm = server.warmup_compiles
+        assert server.refit_ladder("adult") is None
+        assert registry.get("adult").ladder is before_ladder
+        assert server.warmup_compiles == before_warm
+
+    def test_shifted_histogram_changes_ladder(self, adaptive):
+        """Once mid-size traffic appears, the refit adds the rung the
+        static ladder lacked and drops the over-tall one."""
+        enc, cfg, g, registry, server = adaptive
+        for s, seed in [(17, 1), (100, 2), (200, 3), (230, 4)]:
+            server.submit("adult", s, seed=seed)
+        resps = server.serve()
+        assert resps[2].bucket == 512      # old ladder over-pads 200
+        new = server.refit_ladder("adult")
+        assert new is not None
+        assert new.buckets == (64, 128, 256)
+        assert registry.get("adult").ladder is new
+        assert registry.get("adult").observed_sizes() == (17, 100, 200, 230)
+
+    def test_zero_foreground_recompiles_across_swap(self, adaptive):
+        """The swap's compiles land in ``warmup_compiles``; traffic on
+        the new rung immediately after is a cache hit."""
+        enc, cfg, g, registry, server = adaptive
+        server.submit("adult", 200, seed=3)
+        server.serve()
+        warm_before = server.warmup_compiles
+        assert server.refit_ladder("adult") is not None
+        assert server.warmup_compiles >= warm_before   # background-charged
+        k = jax.random.PRNGKey(77)
+        server.submit("adult", 200, key=k)
+        [resp] = server.serve()
+        assert resp.bucket == 256          # the fresh rung, already warm
+        assert resp.cache_hit
+        assert server.stats()["serving_compiles"] == 0
+        oracle = synthesize_table(g, k, cfg, enc, 256)
+        np.testing.assert_array_equal(resp.data, oracle[:200])
+
+    def test_inflight_requests_complete_on_old_ladder(self, adaptive):
+        """A queued request keeps the bucket it bound at submit: the
+        swap happens UNDER it, and it still matches the OLD bucket's
+        oracle bit-for-bit; the same size resubmitted after the swap
+        lands on the new rung and matches THAT oracle."""
+        enc, cfg, g, registry, server = adaptive
+        k_old = jax.random.PRNGKey(5)
+        server.submit("adult", 200, key=k_old)     # binds bucket 512
+        assert server.refit_ladder("adult", sizes=[17, 100, 200]) is not None
+        k_new = jax.random.PRNGKey(6)
+        server.submit("adult", 200, key=k_new)     # binds bucket 256
+        old_resp, new_resp = server.serve()
+        assert (old_resp.bucket, new_resp.bucket) == (512, 256)
+        np.testing.assert_array_equal(
+            old_resp.data, synthesize_table(g, k_old, cfg, enc, 512)[:200])
+        np.testing.assert_array_equal(
+            new_resp.data, synthesize_table(g, k_new, cfg, enc, 256)[:200])
+        assert server.stats()["serving_compiles"] == 0
+
+    def test_refit_is_idempotent(self, adaptive):
+        """Same sizes twice: the second refit is None and builds no new
+        executables."""
+        enc, cfg, g, registry, server = adaptive
+        assert server.refit_ladder("adult", sizes=[17, 200]) is not None
+        warm = server.warmup_compiles
+        cache = server._cache_size()
+        assert server.refit_ladder("adult", sizes=[17, 200]) is None
+        assert server.warmup_compiles == warm
+        assert server._cache_size() == cache
+
+    def test_refit_without_traffic_raises_typed(self, adaptive):
+        """No histogram and no explicit sample: the typed LadderFitError
+        says 'keep the current ladder', nothing is half-swapped."""
+        enc, cfg, g, registry, server = adaptive
+        before = registry.get("adult").ladder
+        with pytest.raises(LadderFitError):
+            server.refit_ladder("adult")
+        assert registry.get("adult").ladder is before
+
+    def test_offered_rows_tracked_per_tenant(self, adaptive):
+        """`offered_rows` counts demand at submit (vs served_rows), the
+        denominator fairness metrics need."""
+        enc, cfg, g, registry, server = adaptive
+        server.submit("adult", 30, seed=1)
+        server.submit("adult", 70, seed=2)
+        assert registry.get("adult").offered_rows == 100
+        server.serve()
+        t = server.stats()["tables"]["adult"]
+        assert (t["offered_rows"], t["rows"]) == (100, 100)

@@ -1,0 +1,386 @@
+"""Continuous-batching scheduler properties + load-path integration.
+
+Pins the guarantees ``ContinuousScheduler`` documents — admit-exactly-
+once, within-tenant FIFO, bounded starvation (via ``starvation_bound``),
+deficit fairness under a one-tenant flood — first as deterministic unit
+tests, then as hypothesis sweeps over arbitrary push/assemble
+interleavings, and finally end-to-end through
+``StreamingSynthesizer(scheduler="continuous")``: byte-identity with the
+FIFO drain on single-tenant traces, oracle parity under interleaved
+multi-tenant admission, and the two-site deadline accounting
+(``expired_admission`` vs ``expired_dispatch``) on a simulated clock."""
+import jax
+import numpy as np
+import pytest
+
+from repro.gan.ctgan import CTGANConfig
+from repro.gan.trainer import init_gan_state
+from repro.serve import (BucketLadder, ContinuousScheduler,
+                         StreamingSynthesizer, TableRegistry, jain_index)
+from repro.synth import synthesize_table
+from repro.tabular import fit_centralized_encoders, make_dataset
+
+try:  # optional dev dep (requirements-dev.txt); sweeps skip without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class TestJainIndex:
+    def test_even_allocation_is_one(self):
+        assert jain_index([5.0, 5.0, 5.0, 5.0]) == pytest.approx(1.0)
+
+    def test_one_tenant_gets_everything(self):
+        assert jain_index([9.0, 0.0, 0.0]) == pytest.approx(1 / 3)
+
+    def test_empty_and_all_zero_vacuously_fair(self):
+        assert jain_index([]) == 1.0
+        assert jain_index([0.0, 0.0]) == 1.0
+
+    def test_negative_allocation_rejected(self):
+        with pytest.raises(ValueError, match="non-negative"):
+            jain_index([1.0, -2.0])
+
+
+class TestContinuousScheduler:
+    def test_validates(self):
+        with pytest.raises(ValueError, match="quantum"):
+            ContinuousScheduler(0)
+        sched = ContinuousScheduler(64)
+        with pytest.raises(ValueError, match="cost"):
+            sched.push("a", None, 0)
+
+    def test_single_tenant_is_fifo(self):
+        """One tenant: admission order == push order, across however
+        many passes the deficit spreads the queue over."""
+        sched = ContinuousScheduler(quantum=100)
+        for i in range(8):
+            sched.push("a", i, 60)
+        order = []
+        while len(sched):
+            order.extend(a.item for a in sched.assemble())
+        assert order == list(range(8))
+
+    def test_head_larger_than_quantum_accumulates_deficit(self):
+        """A head costing k quantums is admitted on pass ceil(k) — the
+        deficit banks across passes while the tenant stays backlogged —
+        and always within the documented starvation bound."""
+        sched = ContinuousScheduler(quantum=100)
+        adm = sched.push("a", "big", 250)
+        assert sched.assemble() == []
+        assert sched.assemble() == []
+        [got] = sched.assemble()           # pass 3: deficit 300 >= 250
+        assert got is adm
+        passes = got.admitted_cycle - got.pushed_cycle + 1
+        assert passes == 3
+        assert passes <= sched.starvation_bound(250, 250)
+
+    def test_drained_tenant_forfeits_deficit(self):
+        """Service credit does not bank across idle periods: a tenant
+        that drains leaves the ring with deficit reset, so its next
+        burst starts from zero."""
+        sched = ContinuousScheduler(quantum=100)
+        sched.push("a", 0, 10)
+        [_] = sched.assemble()
+        assert sched.backlogged() == []
+        sched.push("a", 1, 150)            # would fit a 90-credit carryover
+        assert sched.assemble() == []      # but the credit is gone
+        [got] = sched.assemble()
+        assert got.item == 1
+
+    def test_ring_rotates_between_passes(self):
+        """No tenant permanently owns the front of the cycle: with two
+        tenants backlogged, the pass-leading tenant alternates."""
+        sched = ContinuousScheduler(quantum=64)
+        for i in range(4):
+            sched.push("a", ("a", i), 64)
+            sched.push("b", ("b", i), 64)
+        leaders = []
+        while len(sched):
+            cycle = sched.assemble()
+            if cycle:
+                leaders.append(cycle[0].tenant)
+        assert set(leaders) == {"a", "b"}
+
+    def test_admission_expiry_skips_without_deficit_charge(self):
+        """An expired head is dropped (reported to on_expired) without
+        consuming the tenant's credit, so the live request behind it is
+        admitted in the same pass."""
+        sched = ContinuousScheduler(quantum=100)
+        dead = sched.push("a", "dead", 100, deadline_at=5.0)
+        live = sched.push("a", "live", 100)
+        expired = []
+        cycle = sched.assemble(now=10.0, on_expired=expired.append)
+        assert [a.item for a in cycle] == ["live"]
+        assert expired == [dead]
+        assert len(sched) == 0
+        assert live.admitted_cycle == dead.pushed_cycle
+
+    def test_flood_cannot_starve_the_ring(self):
+        """One tenant floods 100 requests; four others queue 5 each.
+        While everyone is backlogged each pass credits every tenant the
+        same quantum, so per-pass admitted rows are near-evenly split
+        (Jain >= 0.9 over the contended window) and the small tenants
+        finish long before the flood."""
+        sched = ContinuousScheduler(quantum=128)
+        for i in range(100):
+            sched.push("flood", ("flood", i), 64)
+        small = [f"t{j}" for j in range(4)]
+        for t in small:
+            for i in range(5):
+                sched.push(t, (t, i), 64)
+        admitted_rows = {t: 0 for t in ["flood"] + small}
+        finish_pass = {}
+        passes = 0
+        while len(sched):
+            contended = len(sched.backlogged()) == 5
+            for adm in sched.assemble():
+                if contended:
+                    admitted_rows[adm.tenant] += adm.cost
+                finish_pass[adm.tenant] = passes
+            passes += 1
+        assert jain_index(list(admitted_rows.values())) >= 0.9
+        assert all(finish_pass[t] < finish_pass["flood"] for t in small)
+
+    def test_starvation_bound_holds_deterministic(self):
+        """Every request is admitted within starvation_bound passes of
+        its push even while a flood tenant keeps the ring contended."""
+        sched = ContinuousScheduler(quantum=100)
+        reqs = []
+        for i in range(30):
+            reqs.append((sched.push("flood", i, 90), 90 * (i + 1)))
+        victim = sched.push("v", "x", 250)
+        reqs.append((victim, 250))
+        while len(sched):
+            sched.assemble()
+        for adm, cost_ahead in reqs:
+            assert adm.admitted_cycle >= 0
+            passes = adm.admitted_cycle - adm.pushed_cycle + 1
+            assert passes <= sched.starvation_bound(cost_ahead, 250)
+
+
+if HAVE_HYPOTHESIS:
+    _events = st.lists(
+        st.one_of(
+            st.tuples(st.just("push"), st.integers(0, 4),
+                      st.integers(1, 600)),
+            st.just(("assemble",))),
+        min_size=1, max_size=80)
+
+    @settings(max_examples=60, deadline=None)
+    @given(events=_events, quantum=st.integers(16, 512))
+    def test_drr_invariants_any_interleaving(events, quantum):
+        """Arbitrary push/assemble interleavings: every request is
+        admitted exactly once, within-tenant order is FIFO, and the
+        cycle gap between push and admission respects
+        ``starvation_bound`` computed from the queue state at push."""
+        sched = ContinuousScheduler(quantum=quantum)
+        queued_cost = {}               # tenant -> rows currently queued
+        max_cost = {}                  # tenant -> largest request seen
+        pushed, admitted = [], []
+        bound_input = {}               # id(adm) -> (cost_ahead, tenant)
+
+        def drain_one_pass():
+            for adm in sched.assemble():
+                queued_cost[adm.tenant] -= adm.cost
+                admitted.append(adm)
+
+        for ev in events:
+            if ev[0] == "push":
+                _, t, cost = ev
+                tenant = f"t{t}"
+                adm = sched.push(tenant, len(pushed), cost)
+                queued_cost[tenant] = queued_cost.get(tenant, 0) + cost
+                max_cost[tenant] = max(max_cost.get(tenant, 0), cost)
+                bound_input[id(adm)] = (queued_cost[tenant], tenant)
+                pushed.append(adm)
+            else:
+                drain_one_pass()
+        while len(sched):
+            drain_one_pass()
+
+        # admitted exactly once, nothing lost
+        assert len(admitted) == len(pushed)
+        assert {id(a) for a in admitted} == {id(a) for a in pushed}
+        # within-tenant FIFO: admission order preserves push order
+        for tenant in max_cost:
+            mine = [a.item for a in admitted if a.tenant == tenant]
+            assert mine == sorted(mine)
+        # bounded starvation, from each request's push-time queue state
+        for adm in admitted:
+            cost_ahead, tenant = bound_input[id(adm)]
+            passes = adm.admitted_cycle - adm.pushed_cycle + 1
+            assert passes <= sched.starvation_bound(cost_ahead,
+                                                    max_cost[tenant])
+
+
+# ---------------------------------------------------------------------------
+# integration: the continuous drain through the real server
+
+
+@pytest.fixture(scope="module")
+def tenants():
+    """Four tenants sharing one schema/generator (shared jit caches keep
+    this module fast) behind a small three-rung ladder."""
+    ds = make_dataset("adult", n_rows=400, seed=7)
+    key = jax.random.PRNGKey(7)
+    enc = fit_centralized_encoders(ds.data, ds.schema, key)
+    cfg = CTGANConfig(batch_size=8, gen_hidden=(16, 16),
+                      disc_hidden=(16, 16), pac=2, z_dim=8)
+    g = init_gan_state(key, cfg, enc.cond_dim, enc.encoded_dim).g_params
+    registry = TableRegistry()
+    for name in ("t0", "t1", "t2", "t3"):
+        registry.register(name, cfg, enc, g,
+                          ladder=BucketLadder((64, 128, 256)))
+    return registry, enc, cfg, g
+
+
+class _FakeClock:
+    def __init__(self):
+        self.now = 100.0
+
+    def __call__(self):
+        return self.now
+
+
+class TestContinuousServing:
+    def test_single_tenant_trace_byte_identical_to_fifo(self, tenants):
+        """On a single-tenant trace the continuous drain is the FIFO
+        drain: same response order, bit-identical bytes."""
+        registry, enc, cfg, g = tenants
+        trace = [(17, 0), (128, 1), (200, 2), (64, 3), (100, 4), (256, 5)]
+        out = {}
+        for mode in ("fifo", "continuous"):
+            server = StreamingSynthesizer(registry, scheduler=mode)
+            server.warmup(names=["t0"])
+            for rows, ks in trace:
+                server.submit("t0", rows, key=jax.random.PRNGKey(ks))
+            out[mode] = server.serve()
+        fifo, cont = out["fifo"], out["continuous"]
+        assert [r.rid for r in cont] == [r.rid for r in fifo]
+        assert [r.bucket for r in cont] == [r.bucket for r in fifo]
+        for a, b in zip(fifo, cont):
+            np.testing.assert_array_equal(a.data, b.data)
+
+    def test_smallest_admissible_bucket(self, tenants):
+        """Every continuous-mode response is served at the smallest
+        ladder rung that fits its row count."""
+        registry, enc, cfg, g = tenants
+        server = StreamingSynthesizer(registry, scheduler="continuous")
+        server.warmup(names=["t1"])
+        ladder = registry.get("t1").ladder
+        sizes = [1, 63, 64, 65, 128, 129, 255, 256]
+        for s in sizes:
+            server.submit("t1", s, seed=s)
+        resps = server.serve()
+        assert [r.bucket for r in resps] == \
+            [ladder.bucket_for(s) for s in sizes]
+
+    def test_interleaved_multi_tenant_oracle_parity(self, tenants):
+        """Requests submitted mid-drain (between dispatch cycles) across
+        all four tenants: every response — whenever admitted — is
+        bit-identical to its own ``synthesize_table`` oracle."""
+        registry, enc, cfg, g = tenants
+        server = StreamingSynthesizer(registry, scheduler="continuous",
+                                      quantum=128)
+        server.warmup()
+        base = jax.random.PRNGKey(99)
+        keys = {}
+
+        def sub(tenant, rows, i):
+            keys[server.submit(tenant, rows, key=jax.random.fold_in(
+                base, i))] = (jax.random.fold_in(base, i), rows)
+
+        for i, (tenant, rows) in enumerate(
+                [("t0", 100), ("t1", 64), ("t2", 200), ("t3", 17)]):
+            sub(tenant, rows, i)
+        late = [("t1", 128), ("t0", 30), ("t3", 250)]
+        got = []
+        for resp in server.stream():
+            got.append(resp)
+            if late:                       # admit while the drain runs
+                tenant, rows = late.pop()
+                sub(tenant, rows, 10 + len(late))
+        assert len(got) == 7 and not late
+        assert sorted(keys) == sorted(r.rid for r in got)
+        for resp in got:
+            key, rows = keys[resp.rid]
+            assert resp.rows == rows
+            ref = synthesize_table(g, key, cfg, enc, resp.bucket)
+            np.testing.assert_array_equal(resp.data, ref[:rows])
+
+    def test_flood_tenant_cannot_park_the_others(self, tenants):
+        """t0 floods 12 requests BEFORE the other tenants submit one
+        each; under FIFO the victims drain last, under continuous every
+        victim completes before the flood's tail."""
+        registry, enc, cfg, g = tenants
+
+        def run(mode):
+            server = StreamingSynthesizer(registry, scheduler=mode,
+                                          quantum=128)
+            server.warmup()
+            for i in range(12):
+                server.submit("t0", 128, seed=i)
+            victims = {server.submit(t, 64, seed=20 + j): t
+                       for j, t in enumerate(("t1", "t2", "t3"))}
+            order = [r.rid for r in server.serve()]
+            return victims, order
+
+        victims, fifo_order = run("fifo")
+        assert [fifo_order.index(v) for v in victims] == [12, 13, 14]
+        victims, cont_order = run("continuous")
+        flood_last = max(i for i, rid in enumerate(cont_order)
+                         if rid not in victims)
+        assert all(cont_order.index(v) < flood_last for v in victims)
+
+    def test_deadline_checked_at_admission_and_dispatch(self, tenants):
+        """The two expiry sites are separately counted on the simulated
+        clock: a request that dies while queued is dropped at cycle
+        assembly (``expired_admission``); one admitted live whose
+        deadline passes while the cycle drains is dropped at dispatch
+        (``expired_dispatch``)."""
+        registry, enc, cfg, g = tenants
+        clock = _FakeClock()
+        server = StreamingSynthesizer(registry, scheduler="continuous",
+                                      clock=clock, pipeline=False)
+        server.warmup(names=["t2"])
+        # dies in the queue: expired before any cycle is assembled
+        stale = server.submit("t2", 64, seed=1, deadline=5.0)
+        clock.now += 10.0
+        first = server.submit("t2", 64, seed=2)
+        # admitted live into the same cycle, but its deadline passes
+        # while `first` is being served ahead of it
+        mid = server.submit("t2", 64, seed=3, deadline=5.0)
+        last = server.submit("t2", 64, seed=4)
+        got = []
+        for resp in server.stream():
+            got.append(resp.rid)
+            clock.now += 6.0               # one sim service per dispatch
+        assert got == [first, last]
+        stats = server.stats()
+        assert stats["expired_admission"] == 1     # `stale`
+        assert stats["expired_dispatch"] == 1      # `mid`
+        assert stats["expired"] == 2
+        assert stale not in got and mid not in got
+
+    def test_continuous_zero_recompiles_after_warmup(self, tenants):
+        """The zero-recompile contract holds through the DRR drain."""
+        registry, enc, cfg, g = tenants
+        server = StreamingSynthesizer(registry, scheduler="continuous")
+        server.warmup()
+        for i, t in enumerate(("t0", "t1", "t2", "t3") * 2):
+            server.submit(t, 30 + 25 * i, seed=i)
+        resps = server.serve()
+        assert len(resps) == 8
+        assert all(r.cache_hit for r in resps)
+        stats = server.stats()
+        assert stats["serving_compiles"] == 0
+        assert stats["scheduler"] == "continuous"
+
+    def test_invalid_scheduler_rejected(self, tenants):
+        registry, *_ = tenants
+        with pytest.raises(ValueError, match="scheduler"):
+            StreamingSynthesizer(registry, scheduler="lifo")
